@@ -1,0 +1,79 @@
+"""The HetSeq invariant, measured: weighted het-DP gradients vs
+single-process gradients over random capacity mixes.
+
+This is the methodological core of the reproduction — the paper's claim
+that heterogeneous distributed training "does not sacrifice model
+performance" is true *exactly* (not statistically) when aggregation is
+weighted correctly. We report the max absolute gradient deviation across
+random splits; at fp32 it sits at numerical noise (<1e-5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.core import capacity, dummy, weighting
+from repro.models.model import build_model
+
+
+def main(trials: int = 8, quiet: bool = False):
+    cfg = dataclasses.replace(cfgbase.smoke_config("tinyllama-1.1b"),
+                              compute_dtype="float32")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    g, s = 10, 16
+
+    def single(samples):
+        batch = {"inputs": jnp.asarray(samples["inputs"]),
+                 "labels": jnp.asarray(samples["labels"]),
+                 "weights": jnp.ones((g, s))}
+
+        def obj(p, b):
+            o, w, _ = m.loss_fn(p, b)
+            return o, w
+        (o, w), grads = jax.value_and_grad(obj, has_aux=True)(params,
+                                                              batch)
+        return float(o / w), weighting.scale_grads(grads, w)
+
+    rows = []
+    for t in range(trials):
+        samples = {
+            "inputs": rng.integers(0, cfg.vocab_size, (g, s)).astype(
+                np.int32),
+            "labels": rng.integers(0, cfg.vocab_size, (g, s)).astype(
+                np.int32)}
+        loss_ref, g_ref = single(samples)
+        n_workers = int(rng.integers(2, 6))
+        caps = rng.integers(0, 4, n_workers).astype(float)
+        if caps.sum() == 0:
+            caps[0] = 1.0
+        plan = capacity.plan_capacities(g, caps)
+        packed = dummy.pack_global_batch(samples, plan)
+        b = plan.buffer_rows
+        wbs = [{k: jnp.asarray(packed[k][r * b:(r + 1) * b])
+                for k in packed} for r in range(plan.num_ranks)]
+        loss_het, g_het = weighting.simulate_workers(m.loss_fn, params,
+                                                     wbs)
+        gerr = max(float(jnp.max(jnp.abs(a - bb))) for a, bb in
+                   zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_het)))
+        lerr = abs(loss_ref - float(loss_het))
+        rows.append((caps.tolist(), lerr, gerr))
+    if not quiet:
+        print("\n== HetSeq equivalence invariant ==")
+        print(f"| {'capacities':24s} | {'loss err':>10s} | "
+              f"{'max grad err':>12s} |")
+        for caps, lerr, gerr in rows:
+            print(f"| {str(caps):24s} | {lerr:10.2e} | {gerr:12.2e} |")
+        worst = max(r[2] for r in rows)
+        print(f"   worst-case grad deviation: {worst:.2e} "
+              f"({'EXACT (fp noise)' if worst < 1e-4 else 'CHECK'})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

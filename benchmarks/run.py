@@ -1,0 +1,70 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    # the scaling benchmarks emulate the paper's multi-node grid on
+    # host devices; 8 "nodes" like the paper's largest configuration
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+DOC = """Benchmark suite — one entry per paper table/figure + roofline.
+
+  scaling_translation  paper Table 3, Translation block
+  scaling_bert         paper Table 3, BERT block (masked-LM weights)
+  scaling_small        paper Table 3, MNIST block (negative result)
+  equivalence          the HetSeq invariant, measured
+  roofline_bench       §Roofline table from dry-run artifacts
+
+Prints a ``name,us_per_call,derived`` CSV summary at the end.
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    t_all = time.time()
+    csv = []
+
+    from benchmarks import (equivalence, roofline_bench, scaling_bert,
+                            scaling_small, scaling_translation)
+
+    t0 = time.time()
+    res = scaling_translation.main(max_nodes=8, steps=10)
+    base = res[0]
+    best = min(res, key=lambda r: r.avg_step_s)
+    csv.append(("scaling_translation", base.avg_step_s * 1e6,
+                f"best_speedup={base.total_s / best.total_s:.2f}x"))
+
+    res = scaling_bert.main(max_nodes=8, steps=10)
+    base = res[0]
+    best = min(res, key=lambda r: r.avg_step_s)
+    csv.append(("scaling_bert", base.avg_step_s * 1e6,
+                f"best_speedup={base.total_s / best.total_s:.2f}x"))
+
+    res = scaling_small.main(max_nodes=8, steps=8)
+    base = res[0]
+    worst = max(res[1:], key=lambda r: r.avg_step_s) if len(res) > 1 \
+        else base
+    csv.append(("scaling_small", base.avg_step_s * 1e6,
+                f"overhead_at_scale={worst.avg_step_s / base.avg_step_s:.2f}x"))
+
+    rows = equivalence.main(trials=6)
+    worst_g = max(r[2] for r in rows)
+    csv.append(("equivalence", 0.0, f"max_grad_err={worst_g:.2e}"))
+
+    rl = roofline_bench.main()
+    if rl:
+        import numpy as np
+        fr = [r.roofline_frac for r in rl if r.kind == "train"]
+        csv.append(("roofline", 0.0,
+                    f"train_cells={len(fr)} "
+                    f"median_roofline={100 * float(np.median(fr)):.1f}%"))
+
+    print("\n== CSV summary (name,us_per_call,derived) ==")
+    for name, us, derived in csv:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"[benchmarks] total {time.time() - t_all:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 3, MNIST block: the small-model negative result.
+
+The paper's point: with a tiny model + tiny dataset, DP adds collective
+and dispatch overhead without useful parallel work — speedup saturates
+near 1x (their 8-node MNIST run was barely faster than 1 node). We
+reproduce that shape with a ~100k-param model and a small step count:
+expansion should collapse well below 1/nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import base as cfgbase
+from benchmarks.common import HEADER, grid_configs, run_training
+
+
+def model_cfg():
+    return dataclasses.replace(
+        cfgbase.smoke_config("xlstm-125m"),
+        num_layers=2, d_model=32, vocab_size=64)
+
+
+def main(max_nodes: int = 8, steps: int = 10, quiet: bool = False):
+    cfg = model_cfg()
+    results = []
+    for name, nodes, caps in grid_configs(max_nodes):
+        r = run_training(name, cfg, data_parallel=nodes,
+                         capacities=caps, global_batch=8, seq_len=16,
+                         steps=steps)
+        results.append(r)
+    if not quiet:
+        print("\n== Small-model scaling (paper's MNIST negative result) ==")
+        print(HEADER)
+        base = results[0]
+        for r in results:
+            print(r.row(base))
+        print("   (expansion << 1 expected: DP does not help tiny models)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table 3, Translation block: transformer scaling, hom vs het.
+
+The paper trains transformer-base on WMT14 En-De with label-smoothed CE
+(eps=0.1, Adam beta2=0.98) over 1/2/4/8 nodes. We reproduce the
+*scalability shape* with a same-family decoder (tinyllama-smoke scaled
+up a notch) on synthetic bigram text: step time grows sub-linearly with
+node count while per-epoch work divides, heterogeneous mixes track
+homogeneous ones, and the final loss is preserved across configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import base as cfgbase
+from benchmarks.common import HEADER, grid_configs, run_training
+
+
+def model_cfg():
+    return dataclasses.replace(
+        cfgbase.smoke_config("tinyllama-1.1b"),
+        num_layers=4, d_model=128, num_heads=8, num_kv_heads=4,
+        d_ff=352, vocab_size=512)
+
+
+def main(max_nodes: int = 8, steps: int = 12, global_batch: int = 16,
+         seq_len: int = 64, quiet: bool = False):
+    cfg = model_cfg()
+    results = []
+    for name, nodes, caps in grid_configs(max_nodes):
+        # paper protocol: constant global epochs => steps per node config
+        # shrink as nodes grow; we keep measured steps equal and report
+        # per-step time (expansion computes the same either way)
+        r = run_training(name, cfg, data_parallel=nodes,
+                         capacities=caps, global_batch=global_batch,
+                         seq_len=seq_len, steps=steps,
+                         label_smoothing=0.1)
+        results.append(r)
+    if not quiet:
+        print("\n== Translation-block scaling (paper Table 3 analogue) ==")
+        print(HEADER)
+        base = results[0]
+        for r in results:
+            print(r.row(base))
+        hom = {r.nodes: r for r in results if not r.het}
+        het = {r.nodes: r for r in results if r.het}
+        for n in sorted(set(hom) & set(het)):
+            d = abs(hom[n].final_loss - het[n].final_loss)
+            print(f"   loss parity @ {n} nodes: |hom-het| = {d:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Quickstart: the HetSeq mechanism in five minutes (single CPU device).
+
+Demonstrates the paper's core idea end to end, no mesh required:
+  1. build a small decoder LM;
+  2. split one global batch across four *unequal* workers
+     (capacities 3:1:1:0 — the last worker is empty, paper's edge case);
+  3. aggregate weighted per-worker gradients;
+  4. verify the result equals single-process training EXACTLY.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.core import capacity, dummy, weighting
+from repro.models.model import build_model
+
+# -- 1. a small model (fp32 so the equivalence check is exact) -------------
+cfg = dataclasses.replace(cfgbase.smoke_config("tinyllama-1.1b"),
+                          compute_dtype="float32")
+model = build_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+print(f"model: {cfg.name}, "
+      f"{sum(p.size for p in jax.tree.leaves(params)):,} params")
+
+# -- 2. one global batch of 10 sequences -----------------------------------
+rng = np.random.default_rng(0)
+G, S = 10, 32
+samples = {
+    "inputs": rng.integers(0, cfg.vocab_size, (G, S)).astype(np.int32),
+    "labels": rng.integers(0, cfg.vocab_size, (G, S)).astype(np.int32),
+}
+
+# -- 3. single-process reference -------------------------------------------
+def objective(p, batch):
+    obj_sum, w_sum, _ = model.loss_fn(p, batch)
+    return obj_sum, w_sum
+
+ref_batch = {"inputs": jnp.asarray(samples["inputs"]),
+             "labels": jnp.asarray(samples["labels"]),
+             "weights": jnp.ones((G, S))}
+(o, w), g_ref = jax.value_and_grad(objective, has_aux=True)(params,
+                                                            ref_batch)
+loss_ref = float(o / w)
+g_ref = weighting.scale_grads(g_ref, w)
+print(f"single-process loss: {loss_ref:.6f}")
+
+# -- 4. heterogeneous split: capacities 3:1:1:0 -----------------------------
+plan = capacity.plan_capacities(G, [3.0, 1.0, 1.0, 0.0])
+print(f"capacity plan: rows/rank={plan.rows_per_rank.tolist()} "
+      f"buffer={plan.buffer_rows} (worker 3 is EMPTY -> all-dummy)")
+packed = dummy.pack_global_batch(samples, plan)
+B = plan.buffer_rows
+worker_batches = [
+    {k: jnp.asarray(packed[k][r * B:(r + 1) * B]) for k in packed}
+    for r in range(plan.num_ranks)
+]
+loss_het, g_het = weighting.simulate_workers(model.loss_fn, params,
+                                             worker_batches)
+print(f"het-aggregated loss: {float(loss_het):.6f}")
+
+# -- 5. the invariant --------------------------------------------------------
+gerr = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+           zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_het)))
+print(f"max |grad_single - grad_het| = {gerr:.2e}")
+assert gerr < 1e-5, "HetSeq invariant violated!"
+print("OK — heterogeneous DP is exactly single-process training.")

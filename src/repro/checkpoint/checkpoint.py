@@ -1,0 +1,150 @@
+"""M7 — full-state checkpointing (async, atomic, rotated).
+
+The paper's checkpoint carries: model parameters, completed epochs,
+completed steps, optimizer + LR-scheduler state, and the RNG seed. Ours
+additionally persists the capacity plan and the data-stream position so
+an elastic restart with a *different* mesh resumes the identical global
+sample stream (core/elastic.py invariant).
+
+Layout: <dir>/step_<N>/
+  arrays.npz     every pytree leaf, keyed by flattened path
+  meta.json      step/epoch/seed/plan/treedef fingerprint
+  _DONE          commit marker (written last -> crash-atomic)
+
+Async: ``save`` snapshots device arrays to host (blocking, cheap), then
+writes files on a background thread — the train loop never waits on
+disk. On real multi-host deployments only process 0 writes (the paper's
+master-process rule); sharded arrays are fully gathered here since CPU
+dry-run params are process-local (noted in DESIGN.md §deviations).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_DONE = "_DONE"
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    paths_leaves = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for '{key}': ckpt {arr.shape} vs "
+                f"model {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: List[BaseException] = []
+
+    # ---- save ------------------------------------------------------------
+
+    def save(self, step: int, state: Any, meta: Optional[Dict] = None,
+             block: bool = False) -> None:
+        """Snapshot now, write in the background (one writer at a time)."""
+        self.wait()                       # at most one in-flight write
+        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        meta = dict(meta or {})
+        meta["step"] = int(step)
+
+        def write():
+            try:
+                self._write(step, host_state, meta)
+                self._rotate()
+            except BaseException as e:     # surfaced on next wait()
+                self._error.append(e)
+
+        self._thread = threading.Thread(target=write, daemon=True,
+                                        name=f"ckpt-write-{step}")
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def _write(self, step: int, state: Any, meta: Dict) -> None:
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **_flatten_with_paths(state))
+        with open(os.path.join(tmp, "meta.json"), "w") as fh:
+            json.dump(meta, fh, indent=1, default=str)
+        with open(os.path.join(tmp, _DONE), "w") as fh:
+            fh.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)             # atomic commit
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error.pop()
+
+    def _rotate(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---- load ------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            path = os.path.join(self.directory, name)
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and os.path.exists(os.path.join(path, _DONE))):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None
+                ) -> Tuple[Any, Dict]:
+        """Returns (state shaped like ``template``, meta). The template
+        may be differently *sharded* than at save time (elastic re-mesh)
+        — shapes must match, placement is the caller's (device_put)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        if not os.path.exists(os.path.join(path, _DONE)):
+            raise FileNotFoundError(f"checkpoint {path} incomplete")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        with open(os.path.join(path, "meta.json")) as fh:
+            meta = json.load(fh)
+        return _unflatten_like(template, arrays), meta

@@ -1,0 +1,375 @@
+"""Config system for the HetSeq-JAX framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; shapes
+(train_4k / prefill_32k / decode_32k / long_500k) are :class:`ShapeConfig`;
+the heterogeneous-capacity training setup (the paper's contribution) is a
+:class:`HetConfig`.  ``resolve(arch_id)`` returns the registered full config,
+``smoke_config(arch_id)`` a reduced same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+# --------------------------------------------------------------------------
+# Model configuration
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings (GShard-style top-k routing)."""
+
+    num_experts: int = 0
+    top_k: int = 2
+    expert_d_ff: int = 0            # FFN hidden size inside each expert
+    num_shared_experts: int = 0     # DeepSeek-style always-on experts
+    shared_d_ff: int = 0            # hidden size of the shared expert(s)
+    dense_residual: bool = False    # Arctic-style parallel dense FFN branch
+    capacity_factor: float = 1.25   # per-device expert capacity multiplier
+    capacity_factor_eval: float = 2.0  # prefill/eval: generous, fewer drops
+    router_jitter: float = 0.0
+    aux_loss_coef: float = 0.01     # load-balancing auxiliary loss
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention settings."""
+
+    kv_lora_rank: int = 0           # latent dim for compressed KV
+    q_lora_rank: int = 0            # 0 => dense q projection
+    rope_head_dim: int = 64         # decoupled RoPE dims (shared across heads)
+    nope_head_dim: int = 128        # per-head non-RoPE dims
+    v_head_dim: int = 128
+
+    @property
+    def enabled(self) -> bool:
+        return self.kv_lora_rank > 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) settings for hybrid / ssm architectures."""
+
+    state_dim: int = 0              # N: per-head SSM state size (0 => off)
+    head_dim: int = 64              # P: channels per SSM head
+    num_heads: int = 0              # 0 => derived from d_inner / head_dim
+    expand: int = 2                 # d_inner = expand * d_model
+    conv_kernel: int = 4
+    chunk_size: int = 256           # SSD chunked-scan block length
+    ngroups: int = 1                # B/C groups (GVA-style)
+
+    @property
+    def enabled(self) -> bool:
+        return self.state_dim > 0
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block-stack settings (alternating mLSTM / sLSTM blocks)."""
+
+    enabled: bool = False
+    num_heads: int = 4
+    slstm_every: int = 2            # every k-th block is an sLSTM block
+    proj_factor_mlstm: float = 2.0  # mLSTM up-projection factor
+    proj_factor_slstm: float = 1.333  # post-sLSTM gated FFN factor
+    conv_kernel: int = 4
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style hybrid: Mamba2 backbone + weight-shared attention block."""
+
+    enabled: bool = False
+    attn_every: int = 6             # shared attention applied every k layers
+    shared_attn_d_ff: int = 0       # FFN inside the shared block (0 = none)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A decoder-only backbone configuration (LM family)."""
+
+    name: str = "unnamed"
+    family: str = "dense"           # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int = 12
+    d_model: int = 768
+    num_heads: int = 12
+    num_kv_heads: int = 12
+    d_ff: int = 3072                # dense FFN hidden (0 => no FFN sub-block)
+    vocab_size: int = 50304
+    head_dim: int = 0               # 0 => d_model // num_heads
+    max_seq_len: int = 4096
+
+    norm: str = "rmsnorm"           # rmsnorm | layernorm | nonparam_ln
+    activation: str = "swiglu"      # swiglu | gelu | geglu
+    rope_theta: float = 10000.0
+    qk_norm: bool = False           # Chameleon-style query/key norm
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: MLAConfig = field(default_factory=MLAConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    xlstm: XLSTMConfig = field(default_factory=XLSTMConfig)
+    hybrid: HybridConfig = field(default_factory=HybridConfig)
+
+    # modality frontend stubs ([vlm]/[audio]): input_specs() provides
+    # precomputed frame/patch embeddings instead of token ids.
+    frontend: str = "token"         # token | embedding_stub
+
+    # numerics / memory policy
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"             # none | dots | full
+    scan_layers: bool = True
+    attention_impl: str = "reference"   # reference | pallas
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Total parameter count (analytic, matches init_params)."""
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        """Parameters active per token (MoE counts top_k + shared experts)."""
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if long-context decode is supported (SSM/hybrid families)."""
+        return self.ssm.enabled or self.xlstm.enabled
+
+
+# --------------------------------------------------------------------------
+# Shapes (assigned input-shape set for the LM family)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES: Dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch x shape) cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and not model.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{model.name} is pure full-attention (skip noted in DESIGN.md)"
+        )
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Heterogeneous-capacity (the paper's technique) configuration
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HetConfig:
+    """HetSeq heterogeneous data-parallel settings.
+
+    ``capacities`` assigns a relative throughput/memory capacity to each DP
+    rank (pod x data position). The capacity planner converts these into
+    per-rank real-row counts; remaining buffer rows are dummy rows with
+    weight 0 (paper: empty/partial batch handling). ``grad_reduction``
+    selects the paper-faithful all-reduce vs the beyond-paper hierarchical
+    compressed schedule.
+    """
+
+    capacities: Tuple[float, ...] = ()      # empty => homogeneous
+    weighting: str = "tokens"               # tokens | samples
+    grad_reduction: str = "allreduce"       # allreduce | hierarchical
+    compression: str = "none"               # none | int8 | bf16
+    error_feedback: bool = True
+    accum_steps: int = 1                    # delayed update (paper M4)
+    straggler_ema: float = 0.9
+    replan_interval: int = 100              # steps between capacity replans
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.98)    # paper: transformer betas
+    eps: float = 1e-9
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    schedule: str = "inverse_sqrt"              # inverse_sqrt | linear | cosine | constant
+    warmup_steps: int = 4000
+    total_steps: int = 100000
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Logical mesh. DP spans (pod, data); TP/EP/SP use model."""
+
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for ax, s in zip(self.axes, self.shape):
+            if ax in ("pod", "data"):
+                n *= s
+        return n
+
+    @property
+    def model_size(self) -> int:
+        for ax, s in zip(self.axes, self.shape):
+            if ax == "model":
+                return s
+        return 1
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    shape: ShapeConfig = TRAIN_4K
+    het: HetConfig = field(default_factory=HetConfig)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    seed: int = 0
+    zero1: bool = True              # shard optimizer state over DP (beyond paper)
+    label_smoothing: float = 0.0    # paper translation task uses 0.1
+    log_every: int = 10
+    ckpt_every: int = 1000
+    ckpt_dir: str = "/tmp/hetseq_ckpt"
+    ckpt_keep: int = 3
+
+
+def accum_for(model: ModelConfig, multi_pod: bool = False) -> int:
+    """Per-arch gradient-accumulation (paper M4, delayed update) policy
+    for the production train_4k cell.
+
+    Activation temps scale with per-microbatch tokens; the large-d /
+    MoE-giant cells need accumulation to fit 16 GB HBM per chip. The
+    microbatch must still give every DP rank >= 1 row:
+    256 rows / 32 ranks (multi-pod) caps accum at 8 there.
+
+    NOTE: the CPU dry-run backend legalizes bf16 GEMMs to f32 (operand
+    copies), inflating measured activation memory ~2x vs real TPU; the
+    accum chosen here fits even that pessimistic bound (EXPERIMENTS.md).
+    """
+    policy = {
+        "chameleon-34b": (4, 4),         # (single-pod, multi-pod)
+        "glm4-9b": (2, 2),
+        "phi4-mini-3.8b": (2, 2),
+        "deepseek-v2-236b": (8, 8),
+        "arctic-480b": (16, 8),
+        "zamba2-2.7b": (2, 2),
+        "musicgen-large": (2, 2),
+    }.get(model.name, (1, 1))
+    return policy[1 if multi_pod else 0]
+
+
+def optimizer_for(model: ModelConfig, **overrides) -> OptimizerConfig:
+    """Per-architecture optimizer-state dtype policy.
+
+    The two MoE giants cannot hold fp32 Adam moments on 256 x 16 GB:
+      arctic-480b      : 480e9 x 12 B (fp32 p+m+v) / 256 = 22.5 GB/chip.
+                         bf16 p+m+v => 11.25 GB/chip (documented in
+                         EXPERIMENTS.md; stochastic-rounding-free bf16 m/v
+                         is the standard large-MoE compromise).
+      deepseek-v2-236b : fp32 params + bf16 m/v => 7.4 GB/chip.
+    Everything else keeps full fp32 state.
+    """
+    policy = {
+        "arctic-480b": {"m_dtype": "bfloat16", "v_dtype": "bfloat16"},
+        "deepseek-v2-236b": {"m_dtype": "bfloat16", "v_dtype": "bfloat16"},
+    }.get(model.name, {})
+    policy.update(overrides)
+    return OptimizerConfig(**policy)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]) -> None:
+    _REGISTRY[arch_id] = full
+    _SMOKE[arch_id] = smoke
+
+
+def resolve(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    return _SMOKE[arch_id]()
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    # import all arch config modules for their register() side effects
+    from repro.configs import (  # noqa: F401
+        olmo_1b, tinyllama_1_1b, glm4_9b, phi4_mini_3_8b, chameleon_34b,
+        arctic_480b, deepseek_v2_236b, zamba2_2_7b, musicgen_large, xlstm_125m,
+    )
+    _LOADED = True

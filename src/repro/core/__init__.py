@@ -1,0 +1,14 @@
+"""HetSeq core: heterogeneous-capacity data parallelism, SPMD-native.
+
+The paper's mechanisms:
+  weighting.py   M1  weighted loss/grad aggregation
+  capacity.py    M2  per-rank capacity model + planner
+  dummy.py       M3  dummy/partial batch construction (weight masks)
+  accumulate.py  M4  delayed update with exact heterogeneous weighting
+
+Beyond-paper (required at 1000+ node scale):
+  compression.py   int8 gradient compression + error feedback (DCN leg)
+  hierarchical.py  ICI reduce-scatter -> DCN all-reduce -> ICI all-gather
+  straggler.py     step-time EMA -> capacity replanning
+  elastic.py       re-mesh on membership change, exact resume
+"""

@@ -1,0 +1,81 @@
+"""M4 — delayed update (gradient accumulation) with exact weighting.
+
+The paper: aggregate losses from multiple forward passes before one
+backward/update; under heterogeneity the microbatches have different
+weights, so the accumulated update must divide by the *summed* weight
+once — never average per-microbatch means.
+
+Exactness: with per-microbatch objective sums O_i (differentiable) and
+weight sums W_i,
+
+    grad( (Σ O_i) / (Σ W_i) ) = (Σ grad O_i) / (Σ W_i)
+
+so accumulating grad-of-sums and weights separately and dividing once is
+*bit-identical* (up to fp reassociation) to one big batch — for any
+capacity mix. This is the scan implemented here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_grads(
+    loss_fn: Callable[..., Tuple[jnp.ndarray, jnp.ndarray, Dict]],
+    params: Any,
+    microbatches: Dict[str, jnp.ndarray],
+    **loss_kwargs,
+) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
+    """Scan over stacked microbatches; returns (grads, loss, weight_sum).
+
+    ``microbatches``: pytree of arrays with leading dim = accum steps.
+    ``grads`` is the gradient of the weighted-mean loss over all real
+    tokens in all microbatches (already divided by the summed weight).
+    """
+    def obj(p, mb):
+        o, w, _ = loss_fn(p, mb, **loss_kwargs)
+        return o, w
+
+    grad_fn = jax.value_and_grad(obj, has_aux=True)
+
+    def body(carry, mb):
+        g_acc, o_acc, w_acc = carry
+        (o, w), g = grad_fn(params, mb)
+        g_acc = jax.tree.map(jnp.add, g_acc, g)
+        return (g_acc, o_acc + o, w_acc + w), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (g_sum, o_sum, w_sum), _ = jax.lax.scan(
+        body, (zeros, jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), microbatches)
+    w_safe = jnp.maximum(w_sum, 1e-9)
+    grads = jax.tree.map(lambda g: (g / w_safe).astype(jnp.float32), g_sum)
+    return grads, o_sum / w_safe, w_sum
+
+
+def split_microbatches(batch: Dict[str, jnp.ndarray], accum_steps: int,
+                       num_ranks: int = 1) -> Dict[str, jnp.ndarray]:
+    """(R*B, ...) -> (accum, R*B/accum, ...), preserving rank locality.
+
+    The batch layout is rank-major (capacity.py): splitting the leading
+    dim must give every microbatch an equal slice of EVERY rank's buffer
+    (else microbatches land on rank subsets and SPMD stalls):
+    (R, B, ...) -> (R, accum, B/accum, ...) -> (accum, R * B/accum, ...).
+    Requires buffer_rows % accum == 0; callers size buffers accordingly.
+    """
+    def split(a):
+        n = a.shape[0]
+        if n % (accum_steps * num_ranks):
+            raise ValueError(
+                f"rows {n} not divisible by accum {accum_steps} "
+                f"x ranks {num_ranks}")
+        b = n // num_ranks
+        a = a.reshape(num_ranks, accum_steps, b // accum_steps,
+                      *a.shape[1:])
+        a = jnp.swapaxes(a, 0, 1)
+        return a.reshape(accum_steps, num_ranks * (b // accum_steps),
+                         *a.shape[3:])
+
+    return {k: split(v) for k, v in batch.items()}

@@ -1,0 +1,146 @@
+"""M2 — capacity model and planner for heterogeneous DP ranks.
+
+The paper sets per-GPU batch sizes / max-tokens statically according to
+each node's memory. On TPU we model capacity per DP rank (pod x data
+position): ``capacities`` are relative throughput/memory scores. SPMD
+requires uniform buffer shapes, so the planner fills each rank's
+fixed-size buffer with ``n_i <= buffer_rows`` real rows (proportional to
+capacity, largest-remainder rounding) and dummy rows (weight 0) for the
+rest — the paper's partial/empty-batch mechanism (M3) promoted to the
+core scheduling primitive.
+
+The planner is host-side NumPy (it runs between steps, never in the jit
+path) and is re-invoked by the straggler monitor (replanning) and the
+elastic controller (rank loss => capacity 0 => all-dummy rank).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPlan:
+    """Assignment of real rows to DP ranks for one plan window."""
+
+    capacities: np.ndarray        # (R,) relative capacity scores
+    rows_per_rank: np.ndarray     # (R,) real rows n_i assigned per rank
+    buffer_rows: int              # uniform per-rank buffer (>= max n_i)
+    global_rows: int              # sum(rows_per_rank)
+
+    @property
+    def num_ranks(self) -> int:
+        return len(self.rows_per_rank)
+
+    @property
+    def padded_rows(self) -> int:
+        return self.num_ranks * self.buffer_rows
+
+    def row_weights(self) -> np.ndarray:
+        """(R, buffer_rows) 1.0 for real rows, 0.0 for dummy rows."""
+        w = np.zeros((self.num_ranks, self.buffer_rows), np.float32)
+        for r, n in enumerate(self.rows_per_rank):
+            w[r, :n] = 1.0
+        return w
+
+    def efficiency(self) -> float:
+        """Fraction of buffer slots holding real rows (1.0 = homogeneous)."""
+        return float(self.global_rows) / float(self.padded_rows)
+
+
+def plan_capacities(
+    global_rows: int,
+    capacities: Sequence[float],
+    buffer_rows: Optional[int] = None,
+    min_rows: int = 0,
+    headroom: float = 1.0,
+    round_buffer_to: int = 1,
+) -> CapacityPlan:
+    """Largest-remainder proportional allocation of rows to ranks.
+
+    ``buffer_rows`` defaults to the smallest uniform buffer that fits the
+    allocation (ceil of the max share), scaled by ``headroom`` (> 1.0
+    reserves dummy slots so later replans can shift load without a
+    shape change / recompile). Dead ranks (capacity 0) get 0 rows and an
+    all-dummy buffer — collectives still fire uniformly.
+    """
+    caps = np.asarray(capacities, np.float64)
+    if caps.ndim != 1 or len(caps) == 0:
+        raise ValueError("capacities must be a non-empty 1-D sequence")
+    if np.any(caps < 0):
+        raise ValueError("capacities must be >= 0")
+    total = caps.sum()
+    if total <= 0:
+        raise ValueError("at least one rank must have capacity > 0")
+
+    share = global_rows * caps / total
+    base = np.floor(share).astype(np.int64)
+    rem = global_rows - int(base.sum())
+    # hand the leftover rows to the largest fractional remainders
+    frac_order = np.argsort(-(share - base), kind="stable")
+    base[frac_order[:rem]] += 1
+    base = np.maximum(base, np.where(caps > 0, min_rows, 0))
+    # min_rows may have overshot: trim from the largest allocations
+    excess = int(base.sum()) - global_rows
+    if excess > 0:
+        order = np.argsort(-base, kind="stable")
+        for r in order:
+            take = min(excess, int(base[r]) - min_rows)
+            base[r] -= take
+            excess -= take
+            if excess == 0:
+                break
+
+    need = int(base.max())
+    if buffer_rows is None:
+        buffer_rows = int(np.ceil(need * headroom))
+    if round_buffer_to > 1:          # microbatch divisibility (M4)
+        buffer_rows = -(-buffer_rows // round_buffer_to) * round_buffer_to
+    if need > buffer_rows:
+        # capacity-constrained: clip and redistribute to ranks with room
+        overflow = 0
+        for r in range(len(base)):
+            if base[r] > buffer_rows:
+                overflow += int(base[r]) - buffer_rows
+                base[r] = buffer_rows
+        for r in np.argsort(-caps, kind="stable"):
+            if overflow == 0:
+                break
+            room = buffer_rows - int(base[r]) if caps[r] > 0 else 0
+            take = min(room, overflow)
+            base[r] += take
+            overflow -= take
+        if overflow > 0:
+            raise ValueError(
+                f"global_rows={global_rows} exceeds total buffer capacity "
+                f"{buffer_rows * int((caps > 0).sum())}")
+
+    return CapacityPlan(capacities=caps.astype(np.float32),
+                        rows_per_rank=base.astype(np.int64),
+                        buffer_rows=int(buffer_rows),
+                        global_rows=int(base.sum()))
+
+
+def homogeneous_plan(global_rows: int, num_ranks: int,
+                     headroom: float = 1.0) -> CapacityPlan:
+    return plan_capacities(global_rows, np.ones(num_ranks),
+                           headroom=headroom)
+
+
+def replan_from_step_times(plan: CapacityPlan,
+                           step_time_ema: np.ndarray) -> CapacityPlan:
+    """Straggler feedback: capacity ∝ measured throughput (rows/sec).
+
+    A rank processing its rows slowly gets proportionally fewer next
+    window. Dead ranks (ema = inf) get capacity 0 (all-dummy).
+    """
+    ema = np.asarray(step_time_ema, np.float64)
+    rows = np.maximum(plan.rows_per_rank.astype(np.float64), 1.0)
+    with np.errstate(divide="ignore"):
+        throughput = np.where(np.isfinite(ema) & (ema > 0), rows / ema, 0.0)
+    if throughput.sum() <= 0:
+        raise ValueError("all ranks dead")
+    return plan_capacities(plan.global_rows, throughput,
+                           buffer_rows=plan.buffer_rows)

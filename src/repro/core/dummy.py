@@ -1,0 +1,81 @@
+"""M3 — dummy-batch construction and weight masks.
+
+The paper: when a GPU's batch is empty at an epoch boundary, it runs a
+*dummy batch* (a copy of its first real batch) whose gradient is zeroed,
+so NCCL collectives still fire. Partially-filled batches carry their true
+sample count as the aggregation weight.
+
+Here every DP rank owns a fixed-size buffer (capacity.py); this module
+fills buffers: real rows first, then dummy rows that *copy row 0 of the
+global batch* (numerically safe — real token ids, finite activations)
+with per-token weight 0. The weighted aggregation (weighting.py) then
+makes dummy rows exact no-ops in the loss and gradient.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.capacity import CapacityPlan
+
+
+def pack_global_batch(
+    samples: Dict[str, np.ndarray],
+    plan: CapacityPlan,
+    token_weights: Optional[np.ndarray] = None,
+) -> Dict[str, np.ndarray]:
+    """Distribute ``global_rows`` samples into the padded (R * buffer)
+    layout the SPMD step consumes.
+
+    samples: {"inputs": (G, S[, d]), "labels": (G, S)}; rows 0..G-1 are
+    assigned to ranks in plan order (rank r gets the next n_r rows).
+    Returns {"inputs", "labels", "weights"} with leading dim
+    R * buffer_rows — shard this over the DP axes.
+
+    ``token_weights`` (G, S) marks real-token weights within real rows
+    (e.g. 0 for padding tokens inside a sequence); defaults to all-ones.
+    """
+    g = samples["labels"].shape[0]
+    if g != plan.global_rows:
+        raise ValueError(f"got {g} rows, plan expects {plan.global_rows}")
+    seq_shape = samples["labels"].shape[1:]
+    if token_weights is None:
+        token_weights = np.ones((g,) + seq_shape, np.float32)
+
+    out_rows = plan.padded_rows
+    packed: Dict[str, np.ndarray] = {}
+    for key in ("inputs", "labels"):
+        src = samples[key]
+        dst = np.empty((out_rows,) + src.shape[1:], src.dtype)
+        # dummy rows copy row 0 (the paper's "copy its very first batch")
+        dst[:] = src[0]
+        cursor = 0
+        for r, n in enumerate(plan.rows_per_rank):
+            o = r * plan.buffer_rows
+            dst[o:o + n] = src[cursor:cursor + n]
+            cursor += n
+        packed[key] = dst
+
+    w = np.zeros((out_rows,) + seq_shape, np.float32)
+    cursor = 0
+    for r, n in enumerate(plan.rows_per_rank):
+        o = r * plan.buffer_rows
+        w[o:o + n] = token_weights[cursor:cursor + n]
+        cursor += n
+    packed["weights"] = w
+    return packed
+
+
+def unpack_real_rows(packed: Dict[str, np.ndarray],
+                     plan: CapacityPlan) -> Dict[str, np.ndarray]:
+    """Inverse of pack_global_batch (test helper): recover the G real
+    rows in original order."""
+    out: Dict[str, np.ndarray] = {}
+    idx = []
+    for r, n in enumerate(plan.rows_per_rank):
+        o = r * plan.buffer_rows
+        idx.extend(range(o, o + n))
+    for key in ("inputs", "labels", "weights"):
+        out[key] = packed[key][idx]
+    return out

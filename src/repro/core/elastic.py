@@ -1,0 +1,104 @@
+"""Elastic scaling: re-mesh on membership change, exact-resume semantics.
+
+Two regimes, in escalation order:
+
+1. **Soft degradation (no restart)** — a rank dies mid-window: the
+   straggler monitor marks it dead, the capacity planner assigns it 0
+   rows (all-dummy buffer, weight 0). SPMD shapes are unchanged, the
+   dead rank's host is expected to keep participating in collectives
+   (TPU slices fail whole-slice in practice, which is regime 2); for the
+   multi-pod DCN case a lost *pod* is regime 2.
+
+2. **Re-mesh restart** — membership changed durably (pod lost/added):
+   reload the latest checkpoint, rebuild the mesh with the new DP width,
+   and re-plan capacities. Because data order derives from
+   (seed, epoch, global_step) — never from rank count — and aggregation
+   divides by summed weight, the *global* sample stream and the loss
+   are identical across any re-mesh: training resumes exactly.
+
+This module computes the re-mesh decision + new configuration; the
+driver (launch/train.py) performs reload/rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.capacity import CapacityPlan, plan_capacities
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """Logical description of the available hardware."""
+
+    pods: int
+    data_per_pod: int
+    model: int
+
+    @property
+    def dp_size(self) -> int:
+        return self.pods * self.data_per_pod
+
+    def mesh_shape(self) -> Tuple[int, ...]:
+        if self.pods > 1:
+            return (self.pods, self.data_per_pod, self.model)
+        return (self.data_per_pod, self.model)
+
+    def mesh_axes(self) -> Tuple[str, ...]:
+        if self.pods > 1:
+            return ("pod", "data", "model")
+        return ("data", "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshDecision:
+    restart_required: bool
+    topology: MeshTopology
+    plan: CapacityPlan
+    reason: str
+
+
+def plan_remesh(
+    current: MeshTopology,
+    alive_pods: Sequence[int],
+    global_rows: int,
+    capacities_per_pod: Optional[Sequence[float]] = None,
+) -> RemeshDecision:
+    """Decide how to continue after a membership change.
+
+    ``alive_pods``: indices of pods still healthy. If all pods are alive
+    this is a no-op (soft path handles intra-pod stragglers). Otherwise
+    rebuild with the surviving pods and re-plan the same global batch
+    over the smaller DP width — per-rank buffers grow, weights stay
+    exact, the optimizer trajectory is unchanged.
+    """
+    alive = sorted(set(alive_pods))
+    if len(alive) == current.pods:
+        plan = plan_capacities(
+            global_rows,
+            np.repeat(np.asarray(capacities_per_pod, np.float64),
+                      current.data_per_pod)
+            if capacities_per_pod is not None
+            else np.ones(current.dp_size))
+        return RemeshDecision(False, current, plan, "membership unchanged")
+    if not alive:
+        raise ValueError("no pods alive")
+    new_topo = MeshTopology(pods=len(alive),
+                            data_per_pod=current.data_per_pod,
+                            model=current.model)
+    caps = (np.asarray([capacities_per_pod[p] for p in alive], np.float64)
+            if capacities_per_pod is not None else np.ones(len(alive)))
+    plan = plan_capacities(global_rows,
+                           np.repeat(caps, new_topo.data_per_pod))
+    return RemeshDecision(
+        True, new_topo, plan,
+        f"pods {sorted(set(range(current.pods)) - set(alive))} lost; "
+        f"re-mesh to {new_topo.mesh_shape()} and resume from checkpoint")
+
+
+def validate_resume_equivalence(plan_a: CapacityPlan, plan_b: CapacityPlan
+                                ) -> bool:
+    """Two plans consume the same global batch (exact-resume invariant)."""
+    return plan_a.global_rows == plan_b.global_rows

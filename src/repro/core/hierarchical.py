@@ -1,0 +1,127 @@
+"""Beyond-paper: hierarchical (ICI-then-DCN) gradient reduction.
+
+On a multi-pod mesh ("pod", "data", "model"), a flat all-reduce over
+("pod","data") pushes full-gradient traffic over the slow cross-pod DCN
+link. The hierarchical schedule:
+
+  1. in-pod reduce-scatter over "data" (fast ICI) — each in-pod rank
+     owns a 1/data_size shard of the pod-local gradient sum;
+  2. cross-pod all-reduce of the *shard only* over "pod" (DCN) —
+     optionally int8-compressed with error feedback (compression.py);
+  3. in-pod all-gather over "data" to rebuild the full gradient.
+
+Cross-pod bytes drop by data_size (16x) x compression (~3.9x) vs the
+flat reduction. Expressed with jax.shard_map(axis_names={"pod","data"})
+so the "model" axis stays under automatic (pjit) partitioning.
+
+This module provides the *manual-collective* building block; the train
+step (launch/steps.py) wires it behind ``HetConfig.grad_reduction``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.quantize import ops as q_ops
+from repro.kernels.quantize import ref as q_ref
+
+
+def _pad_to(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % mult
+    return jnp.pad(flat, (0, pad)) if pad else flat
+
+
+def hierarchical_reduce_leaf(
+    g: jnp.ndarray,
+    err: Optional[jnp.ndarray],
+    *,
+    data_axis: str = "data",
+    pod_axis: str = "pod",
+    compress: bool = False,
+    block_size: int = 256,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Inside shard_map(manual over {pod, data}): reduce one leaf.
+
+    ``g`` is this rank's local gradient contribution (sum over its
+    tokens). Returns (globally summed gradient, new error state).
+    """
+    shape = g.shape
+    data_size = jax.lax.axis_size(data_axis)
+    flat = _pad_to(g.astype(jnp.float32), data_size)
+    # 1) in-pod reduce-scatter over ICI: each rank owns a shard
+    shard = jax.lax.psum_scatter(
+        flat.reshape(data_size, -1), data_axis, scatter_dimension=0,
+        tiled=False)
+    # 2) cross-pod reduction over DCN
+    if compress:
+        corrected = shard + (err if err is not None else 0.0)
+        q, s = q_ops.quantize_int8(corrected, block_size=block_size, key=key)
+        deq_local = q_ref.dequantize_int8(q, s, corrected.shape, block_size)
+        new_err = corrected - deq_local
+        # int8 payload + fp32 scales cross the DCN link
+        q_sum = jax.lax.psum(q.astype(jnp.int32), pod_axis)
+        s_all = jax.lax.all_gather(s, pod_axis)           # (pods, blocks)
+        # reconstruct: sum of per-pod dequantized shards. int8 values were
+        # summed pre-scale only if scales match; use per-pod scales via
+        # the gathered table: deq_sum = Σ_p q_p * s_p. We recover it from
+        # q_sum only when scales are shared — instead gather q too:
+        # cheaper equivalent: psum of locally-dequantized shard would be
+        # fp32 traffic; to keep int8 on the wire we gather int8 + scales.
+        q_all = jax.lax.all_gather(q, pod_axis)           # (pods, blocks, B)
+        del q_sum
+        deq = jnp.einsum("pbk,pb->bk", q_all.astype(jnp.float32), s_all)
+        shard = deq
+    else:
+        new_err = err
+        shard = jax.lax.psum(shard, pod_axis)
+    # 3) in-pod all-gather over ICI to rebuild the full leaf
+    full = jax.lax.all_gather(shard, data_axis).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return full[:n].reshape(shape), new_err
+
+
+def hierarchical_reduce_tree(
+    grads: Any,
+    err_state: Optional[Any],
+    *,
+    data_axis: str = "data",
+    pod_axis: str = "pod",
+    compress: bool = False,
+    block_size: int = 256,
+    key: Optional[jax.Array] = None,
+) -> Tuple[Any, Optional[Any]]:
+    """Apply hierarchical_reduce_leaf across a gradient pytree."""
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = (treedef.flatten_up_to(err_state) if err_state is not None
+            else [None] * len(leaves))
+    keys = (jax.random.split(key, len(leaves)) if key is not None
+            else [None] * len(leaves))
+    outs, nerrs = [], []
+    for g, e, k in zip(leaves, errs, keys):
+        o, ne = hierarchical_reduce_leaf(
+            g, e, data_axis=data_axis, pod_axis=pod_axis,
+            compress=compress, block_size=block_size, key=k)
+        outs.append(o)
+        nerrs.append(ne)
+    new_err = (treedef.unflatten(nerrs) if err_state is not None else None)
+    return treedef.unflatten(outs), new_err
+
+
+def cross_pod_bytes(grads: Any, num_params_bytes: int = 4,
+                    data_size: int = 16, compress: bool = False,
+                    block_size: int = 256) -> int:
+    """Analytic DCN bytes per step for the reduction (for §Roofline)."""
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    shard = total // data_size
+    if not compress:
+        return shard * num_params_bytes * 2          # psum ~ 2x shard bytes
+    payload = shard * 1 + -(-shard // block_size) * 4
+    return payload * 2

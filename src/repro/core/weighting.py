@@ -1,0 +1,88 @@
+"""M1 — weighted loss/gradient aggregation (the HetSeq invariant).
+
+The paper's master process computes ``sum_i(loss_i * w_i) / sum_i(w_i)``
+over workers and broadcasts; gradients are averaged the same way. In
+SPMD both collapse into a pair of psums (the weight psum is a scalar).
+
+Two call styles:
+  * global-view (pjit): the batch carries a per-token ``weights`` array
+    (0 for dummy tokens); ``jnp.sum`` over the sharded batch is already
+    the global weighted sum — XLA inserts the reduction. The helpers here
+    are then just the final division (``finalize``).
+  * manual (shard_map / benchmark simulation): ``psum_weighted`` performs
+    the explicit collective on a named axis.
+
+The invariant (tests/test_invariant.py encodes it property-based):
+  for ANY split of a global batch across R workers with arbitrary
+  per-worker counts (including zero => dummy rows, weight 0),
+  aggregate(grads, weights) == grad of the single-process loss over the
+  union of real rows.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def finalize(objective_sum: jnp.ndarray, weight_sum: jnp.ndarray
+             ) -> jnp.ndarray:
+    """Global weighted mean from (already globally summed) sums."""
+    return objective_sum / jnp.maximum(weight_sum, 1e-9)
+
+
+def scale_grads(grads: Any, weight_sum: jnp.ndarray) -> Any:
+    """Divide a gradient-of-sums pytree by the total weight, once."""
+    inv = 1.0 / jnp.maximum(weight_sum, 1e-9)
+    return jax.tree.map(lambda g: g * inv.astype(g.dtype), grads)
+
+
+def psum_weighted(value: jnp.ndarray, weight: jnp.ndarray,
+                  axis) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Explicit HetSeq aggregation on a named mesh axis.
+
+    Returns (weighted mean over the axis, total weight). ``value`` is a
+    per-shard *sum* (loss sum or grad-of-sum); ``weight`` the per-shard
+    weight sum. Ranks holding only dummy data contribute weight 0 —
+    the collective still fires (uniform SPMD), their payload is zeros.
+    """
+    total_v = jax.lax.psum(value, axis)
+    total_w = jax.lax.psum(weight, axis)
+    return total_v / jnp.maximum(total_w, 1e-9), total_w
+
+
+def weighted_grad_psum(grads: Any, weight: jnp.ndarray, axis) -> Any:
+    """Pytree version of psum_weighted for gradients."""
+    total_w = jax.lax.psum(weight, axis)
+    inv = 1.0 / jnp.maximum(total_w, 1e-9)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis) * inv, grads)
+
+
+def simulate_workers(loss_fn, params, worker_batches: Sequence[Dict]
+                     ) -> Tuple[jnp.ndarray, Any]:
+    """Reference het-DP executor (no mesh): runs each worker's batch
+    through ``loss_fn`` sequentially and aggregates with the HetSeq rule.
+    Used by the equivalence benchmark and property tests.
+
+    Each worker batch carries its own per-token weights; empty workers
+    (all weights 0) still execute — the paper's dummy-batch path.
+    Returns (loss, grads) that must equal single-process training on the
+    union of all real rows.
+    """
+    def obj(p, b):
+        o, w, _ = loss_fn(p, b)
+        return o, w
+
+    total_obj = 0.0
+    total_w = 0.0
+    grads_sum = None
+    for b in worker_batches:
+        (o, w), g = jax.value_and_grad(obj, has_aux=True)(params, b)
+        total_obj += o
+        total_w += w
+        grads_sum = g if grads_sum is None else jax.tree.map(
+            jnp.add, grads_sum, g)
+    loss = finalize(jnp.asarray(total_obj), jnp.asarray(total_w))
+    grads = scale_grads(grads_sum, jnp.asarray(total_w))
+    return loss, grads

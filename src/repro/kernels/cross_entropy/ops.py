@@ -1,0 +1,41 @@
+"""Weighted cross-entropy op with implementation dispatch (see ref.py)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.cross_entropy import ref
+
+
+def weighted_cross_entropy(
+    hidden: jnp.ndarray,
+    lm_head: jnp.ndarray,
+    labels: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    label_smoothing: float = 0.0,
+    logit_softcap: float = 0.0,
+    impl: str = "reference",
+    chunk_size: int = 8192,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (weighted_loss_sum, weight_sum) — HetSeq aggregation contract."""
+    if impl == "dense":
+        return ref.ce_dense(hidden, lm_head, labels, weights,
+                            label_smoothing=label_smoothing,
+                            logit_softcap=logit_softcap)
+    if impl == "reference":
+        return ref.ce_chunked(hidden, lm_head, labels, weights,
+                              label_smoothing=label_smoothing,
+                              logit_softcap=logit_softcap,
+                              chunk_size=chunk_size)
+    if impl == "pallas":
+        from repro.kernels.cross_entropy.cross_entropy import (
+            cross_entropy_pallas,
+        )
+        return cross_entropy_pallas(hidden, lm_head, labels, weights,
+                                    label_smoothing=label_smoothing,
+                                    logit_softcap=logit_softcap,
+                                    interpret=interpret)
+    raise ValueError(f"unknown cross-entropy impl '{impl}'")

@@ -1,0 +1,188 @@
+"""Pure-jnp oracles for large-vocab weighted cross entropy.
+
+The HetSeq weighted-loss contract: every token carries a weight (0 for
+dummy/padding rows — paper M1/M3); the op returns the *weighted loss sum*
+and the *weight sum* so callers aggregate exactly (never per-shard means).
+
+``ce_dense`` materializes logits (oracle). ``ce_chunked`` scans over token
+chunks so the (tokens, vocab) logit matrix never exists at full size —
+and attaches a recompute *backward* (custom_vjp): under plain autodiff
+the chunk scan would save each (chunk, V) logit tile as a residual,
+which for a 200k vocabulary is exactly the memory the kernel exists to
+avoid. The backward saves only the per-token lse and rebuilds tiles:
+
+    dlogits = w * [(1-eps)(softmax - onehot) + eps(softmax - 1/V)]
+    dh = dlogits @ W^T ;  dW += h^T @ dlogits
+
+The Pallas kernel (cross_entropy.py) is the TPU forward with
+vocab-blocked VMEM tiling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ce_dense(
+    hidden: jnp.ndarray,      # (T, d) final hidden states
+    lm_head: jnp.ndarray,     # (d, V)
+    labels: jnp.ndarray,      # (T,) int32
+    weights: jnp.ndarray,     # (T,) f32, 0 for dummy tokens
+    *,
+    label_smoothing: float = 0.0,
+    logit_softcap: float = 0.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    logits = hidden.astype(jnp.float32) @ lm_head.astype(jnp.float32)
+    if logit_softcap > 0.0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = lse - true_logit
+    if label_smoothing > 0.0:
+        # fairseq-style label-smoothed CE (paper translation task, eps=0.1)
+        mean_logit = jnp.mean(logits, axis=-1)
+        nll = (1.0 - label_smoothing) * nll + \
+            label_smoothing * (lse - mean_logit)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(nll * w), jnp.sum(w)
+
+
+def ce_chunked(
+    hidden: jnp.ndarray,
+    lm_head: jnp.ndarray,
+    labels: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    label_smoothing: float = 0.0,
+    logit_softcap: float = 0.0,
+    chunk_size: int = 8192,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if logit_softcap > 0.0:
+        # softcap backward needs the raw tile too — plain autodiff here
+        # (only small-vocab archs use softcap; memory is not a concern)
+        return _ce_chunked_fwd_only(
+            hidden, lm_head, labels, weights,
+            label_smoothing=label_smoothing, logit_softcap=logit_softcap,
+            chunk_size=chunk_size)
+    return _ce(hidden, lm_head, labels.astype(jnp.int32),
+               weights.astype(jnp.float32), float(label_smoothing),
+               int(chunk_size))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _ce(hidden, lm_head, labels, weights, label_smoothing, chunk_size):
+    return _ce_chunked_fwd_only(hidden, lm_head, labels, weights,
+                                label_smoothing=label_smoothing,
+                                chunk_size=chunk_size)
+
+
+def _ce_fwd(hidden, lm_head, labels, weights, label_smoothing, chunk_size):
+    (loss_sum, w_sum), lse = _ce_chunked_fwd_only(
+        hidden, lm_head, labels, weights,
+        label_smoothing=label_smoothing, chunk_size=chunk_size,
+        want_lse=True)
+    return (loss_sum, w_sum), (hidden, lm_head, labels, weights, lse)
+
+
+def _ce_bwd(label_smoothing, chunk_size, res, cotangents):
+    dloss, _ = cotangents                     # w_sum is weight-only: no grad
+    hidden, lm_head, labels, weights, lse = res
+    t, d = hidden.shape
+    v = lm_head.shape[1]
+    chunk = min(chunk_size, t)
+    pad = (-t) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad))
+        weights = jnp.pad(weights, (0, pad))
+        lse = jnp.pad(lse, (0, pad))
+    n = hidden.shape[0] // chunk
+    hc = hidden.reshape(n, chunk, d)
+    lc = labels.reshape(n, chunk)
+    wc = weights.reshape(n, chunk).astype(jnp.float32)
+    lsec = lse.reshape(n, chunk)
+    eps = label_smoothing
+
+    def body(dw_acc, inputs):
+        h, lab, w, ls = inputs
+        logits = jax.lax.dot_general(                    # recompute tile
+            h, lm_head, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        p = jnp.exp(logits - ls[:, None])                # softmax via lse
+        onehot = jax.nn.one_hot(lab, v, dtype=jnp.float32)
+        dlogits = (1.0 - eps) * (p - onehot)
+        if eps > 0.0:
+            dlogits = dlogits + eps * (p - 1.0 / v)
+        dlogits = (dlogits * (w * dloss)[:, None]).astype(h.dtype)
+        dh = jax.lax.dot_general(
+            dlogits, lm_head, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dw_acc = dw_acc + jax.lax.dot_general(
+            h, dlogits, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return dw_acc, dh
+
+    dw0 = jnp.zeros((d, v), jnp.float32)
+    dw, dhs = jax.lax.scan(body, dw0, (hc, lc, wc, lsec))
+    dh = dhs.reshape(-1, d)[:t]
+    return (dh.astype(hidden.dtype), dw.astype(lm_head.dtype), None, None)
+
+
+_ce.defvjp(_ce_fwd, _ce_bwd)
+
+
+def _ce_chunked_fwd_only(
+    hidden: jnp.ndarray,
+    lm_head: jnp.ndarray,
+    labels: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    label_smoothing: float = 0.0,
+    logit_softcap: float = 0.0,
+    chunk_size: int = 8192,
+    want_lse: bool = False,
+):
+    t, d = hidden.shape
+    orig_t = t
+    chunk = min(chunk_size, t)
+    if t % chunk != 0:
+        pad = chunk - t % chunk
+        hidden = jnp.pad(hidden, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad))
+        weights = jnp.pad(weights, (0, pad))
+        t = t + pad
+    n = t // chunk
+    hc = hidden.reshape(n, chunk, d)
+    lc = labels.reshape(n, chunk)
+    wc = weights.reshape(n, chunk)
+
+    def body(carry, inputs):
+        loss_sum, w_sum = carry
+        h, lab, w = inputs
+        # native-dtype operands + f32 accumulation: avoids materializing
+        # fp32 copies of hidden/lm_head (XLA hoists per-chunk converts
+        # into whole-array converts outside the scan)
+        logits = jax.lax.dot_general(
+            h, lm_head, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if logit_softcap > 0.0:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        true_logit = jnp.take_along_axis(logits, lab[:, None], axis=-1)[:, 0]
+        nll = lse - true_logit
+        if label_smoothing > 0.0:
+            mean_logit = jnp.mean(logits, axis=-1)
+            nll = (1.0 - label_smoothing) * nll + \
+                label_smoothing * (lse - mean_logit)
+        w = w.astype(jnp.float32)
+        return (loss_sum + jnp.sum(nll * w), w_sum + jnp.sum(w)), lse
+
+    (loss_sum, w_sum), lses = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, wc))
+    if want_lse:
+        return (loss_sum, w_sum), lses.reshape(-1)[:orig_t]
+    return loss_sum, w_sum

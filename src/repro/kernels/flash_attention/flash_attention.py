@@ -1,0 +1,148 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Design (TPU-native, not a CUDA port):
+  * grid = (batch, q_heads, q_blocks, kv_blocks); the kv dimension is the
+    innermost, *sequential* ("arbitrary") grid axis, so the fp32 running
+    softmax state (acc, m, l) lives in VMEM scratch and persists across kv
+    iterations — the TPU grid is executed in order, which replaces the
+    CUDA notion of a per-CTA loop over KV tiles.
+  * BlockSpec tiles: q (1, 1, block_q, D) and k/v (1, 1, block_kv, D) are
+    MXU-aligned (block sizes multiples of 128 where the head dim allows);
+    GQA is expressed in the k/v index_map (kv head = q head // q_per_kv)
+    so no repeated-KV tensor is ever materialized in HBM.
+  * Causal masking is positional (q_offset supports decode/chunked
+    prefill); fully-masked kv blocks are skipped via ``pl.when`` so they
+    cost a grid tick but no FLOPs.
+
+Validated in interpret mode against ref.mha_dense (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, block_q: int, block_kv: int, causal: bool,
+               q_offset: int, seq_kv: int, num_kv_blocks: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block is live unless causal pruning removes it entirely:
+    # smallest q position in this block >= largest kv position needed.
+    q_start = qb * block_q + q_offset
+    kv_start = kb * block_kv
+    live = (not causal) or True
+    run = jnp.logical_or(jnp.logical_not(jnp.bool_(causal)),
+                         q_start + block_q - 1 >= kv_start)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = (q_start +
+                jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0))
+        kpos = (kv_start +
+                jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1))
+        mask = kpos < seq_kv
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]                          # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = (l_ref[...] * corr[:, None] +
+                      jnp.sum(p, axis=-1, keepdims=True))
+        acc_ref[...] = (acc_ref[...] * corr[:, None] +
+                        jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(kb == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,                      # (B, Sq, H, D)
+    k: jnp.ndarray,                      # (B, Skv, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    q_per_kv = h // hkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+
+    block_q = min(block_q, max(sq, 8))
+    block_kv = min(block_kv, max(skv, 8))
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    # (B, S, H, D) -> (B, H, S, D) so the tile is a clean (block, D) matrix
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    n_q = qt.shape[2] // block_q
+    n_kv = kt.shape[2] // block_kv
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        causal=causal, q_offset=q_offset, seq_kv=skv, num_kv_blocks=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bi, hi, qi, ki: (bi, hi // q_per_kv, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bi, hi, qi, ki: (bi, hi // q_per_kv, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),    # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running sum
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :sq, :]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,46 @@
+"""Public attention op with implementation dispatch.
+
+``impl``:
+  * "reference"  — chunked online-softmax jnp (CPU dry-run / oracle-adjacent)
+  * "dense"      — full score matrix (tiny shapes, tests)
+  * "pallas"     — Pallas TPU kernel (``flash_attention.py``); on non-TPU
+                   backends tests run it with interpret=True.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+    impl: str = "reference",
+    chunk_size: int = 512,
+    kv_len: Optional[jnp.ndarray] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if impl == "dense":
+        return ref.mha_dense(q, k, v, causal=causal, q_offset=q_offset,
+                             softmax_scale=softmax_scale, kv_len=kv_len)
+    if impl == "reference":
+        return ref.mha_chunked(q, k, v, causal=causal, q_offset=q_offset,
+                               softmax_scale=softmax_scale,
+                               chunk_size=chunk_size, kv_len=kv_len)
+    if impl == "pallas":
+        from repro.kernels.flash_attention.flash_attention import (
+            flash_attention_pallas,
+        )
+        return flash_attention_pallas(
+            q, k, v, causal=causal, q_offset=q_offset,
+            softmax_scale=softmax_scale, interpret=interpret)
+    raise ValueError(f"unknown attention impl '{impl}'")

@@ -1,0 +1,244 @@
+"""Pure-jnp oracles for flash attention.
+
+Two references:
+  * ``mha_dense`` — materializes the full score matrix; the ground-truth
+    oracle for kernel tests (small shapes only).
+  * ``mha_chunked`` — online-softmax scan over KV chunks; numerically equal
+    to ``mha_dense`` but with O(S * chunk) memory. This is what the model
+    lowers on backends where the Pallas kernel is unavailable (CPU dry-run),
+    so dry-run FLOPs/memory are honest.
+
+Layouts: q (B, Sq, H, D); k/v (B, Skv, Hkv, D) with H % Hkv == 0 (GQA).
+``q_offset`` is the absolute position of q[0] (decode: q_offset = pos).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(x: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv * q_per_kv, D) by head repetition."""
+    if q_per_kv == 1:
+        return x
+    b, s, hkv, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, hkv, q_per_kv, d))
+    return x.reshape(b, s, hkv * q_per_kv, d)
+
+
+def mha_dense(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+    kv_len: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Dense-softmax oracle. kv_len (B,) masks positions >= kv_len."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        mask = mask[None, :, :] & (kpos[None, None, :] < kv_len[:, None, None])
+        scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    else:
+        scores = jnp.where(mask[None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mha_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+    chunk_size: int = 512,
+    kv_len: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Flash-style attention with a flash-style *backward*.
+
+    The plain chunked scan (``_mha_chunked_fwd_only``) is numerically the
+    oracle, but under ``jax.grad`` its scan saves per-chunk probability
+    tiles as residuals — O(S^2) memory, exactly what flash attention
+    exists to avoid. This wrapper attaches the standard recompute
+    backward (custom_vjp): saves only (q, k, v, out, lse) and rebuilds
+    each (Sq, chunk) tile in both passes. This is also what makes the
+    dry-run roofline honest: HLO memory stays O(S * chunk).
+    """
+    scale = (softmax_scale if softmax_scale is not None
+             else q.shape[-1] ** -0.5)
+    if kv_len is None:
+        kv_len = jnp.full((q.shape[0],), k.shape[1], jnp.int32)
+    return _flash(q, k, v, kv_len, bool(causal), int(q_offset),
+                  float(scale), int(chunk_size))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, kv_len, causal, q_offset, scale, chunk_size):
+    out, _ = _flash_fwd_impl(q, k, v, kv_len, causal, q_offset, scale,
+                             chunk_size)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, kv_len, causal, q_offset, scale, chunk_size):
+    return _mha_chunked_fwd_only(
+        q, k, v, causal=causal, q_offset=q_offset, softmax_scale=scale,
+        chunk_size=chunk_size, kv_len=kv_len, want_lse=True)
+
+
+def _flash_fwd(q, k, v, kv_len, causal, q_offset, scale, chunk_size):
+    out, lse = _flash_fwd_impl(q, k, v, kv_len, causal, q_offset, scale,
+                               chunk_size)
+    return out, (q, k, v, kv_len, out, lse)
+
+
+def _flash_bwd(causal, q_offset, scale, chunk_size, res, dout):
+    q, k, v, kv_len, out, lse = res
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    q_per_kv = h // hkv
+    chunk = min(chunk_size, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+
+    Dv = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                 axis=-1)                              # (B, Sq, H)
+    qpos = jnp.arange(sq) + q_offset
+
+    kc = k.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inputs):
+        dq_acc, cidx = carry
+        kb, vb = inputs
+        kbf = _repeat_kv(kb, q_per_kv)
+        vbf = _repeat_kv(vb, q_per_kv)
+        s = jnp.einsum("bqhd,bkhd->bqhk", q, kbf,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = cidx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask = qpos[:, None] >= kpos[None, :]
+        bmask = mask[None, :, :] & (kpos[None, None, :] <
+                                    kv_len[:, None, None])
+        p = jnp.where(bmask[:, :, None, :],
+                      jnp.exp(s - lse[..., None]), 0.0)
+        pl = p.astype(q.dtype)
+        dv_b = jnp.einsum("bqhk,bqhd->bkhd", pl, dout,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqhd,bkhd->bqhk", dout, vbf,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - Dv[..., None]) * scale).astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum("bqhk,bkhd->bqhd", ds, kbf,
+                                     preferred_element_type=jnp.float32)
+        dk_b = jnp.einsum("bqhk,bqhd->bkhd", ds, q,
+                          preferred_element_type=jnp.float32)
+        return (dq_acc, cidx + 1), (dk_b, dv_b)
+
+    dq0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    (dq, _), (dks, dvs) = jax.lax.scan(body, (dq0, jnp.int32(0)),
+                                       (kc, vc))
+    skv_p = n_chunks * chunk
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, skv_p, h, d)[:, :skv]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, skv_p, h, d)[:, :skv]
+    if q_per_kv > 1:                       # GQA: fold repeated heads back
+        dk = dk.reshape(b, skv, hkv, q_per_kv, d).sum(axis=3)
+        dv = dv.reshape(b, skv, hkv, q_per_kv, d).sum(axis=3)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _mha_chunked_fwd_only(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+    chunk_size: int = 512,
+    kv_len: Optional[jnp.ndarray] = None,
+    want_lse: bool = False,
+):
+    """Online-softmax (flash-style) scan over KV chunks. fp32 accumulators."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    q_per_kv = h // hkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    chunk = min(chunk_size, skv)
+    if skv % chunk != 0:
+        # pad KV to a chunk multiple; padded keys are masked out via kv_len
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = jnp.full((b,), skv, dtype=jnp.int32)
+    n_chunks = k.shape[1] // chunk
+
+    qpos = jnp.arange(sq) + q_offset
+
+    kc = k.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inputs):
+        acc, m, l, cidx = carry                # cidx loop-carried: keeps
+        kb, vb = inputs                        # masks per-chunk (no hoist)
+        kb = _repeat_kv(kb, q_per_kv)
+        vb = _repeat_kv(vb, q_per_kv)
+        # native-dtype qk with f32 accumulation: no fp32 copy of q/k
+        s = jnp.einsum("bqhd,bkhd->bqhk", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = cidx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask = qpos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            bmask = mask[None, :, :] & (kpos[None, None, :] < kv_len[:, None, None])
+            s = jnp.where(bmask[:, :, None, :], s, NEG_INF)
+        else:
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhk,bkhd->bqhd", p.astype(q.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new, cidx + 1), None
+
+    acc0 = jnp.zeros((b, sq, h, d), dtype=jnp.float32)
+    m0 = jnp.full((b, sq, h), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, sq, h), dtype=jnp.float32)
+    (acc, m, l, _), _ = jax.lax.scan(
+        body, (acc0, m0, l0, jnp.int32(0)), (kc, vc))
+    out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+    if want_lse:
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))       # (B, Sq, H)
+        return out, lse
+    return out

@@ -1,0 +1,18 @@
+"""Absorbed-MLA decode op with implementation dispatch (see ref.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.mla_decode import ref
+
+
+def mla_decode_attention(q_abs, q_r, ckv, kr, kv_len, scale,
+                         *, impl: str = "dense", chunk: int = 512,
+                         interpret: bool = False):
+    if impl == "dense":
+        return ref.mla_decode_dense(q_abs, q_r, ckv, kr, kv_len, scale)
+    if impl == "pallas":
+        from repro.kernels.mla_decode.mla_decode import mla_decode_pallas
+        return mla_decode_pallas(q_abs, q_r, ckv, kr, kv_len, scale,
+                                 chunk=chunk, interpret=interpret)
+    raise ValueError(f"unknown mla decode impl '{impl}'")

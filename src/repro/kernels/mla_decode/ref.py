@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for absorbed-MLA single-token decode attention.
+
+Inputs (per layer, per device shard):
+  q_abs (B, H, r)   queries absorbed through W_uk into latent space
+  q_r   (B, H, Dr)  decoupled RoPE queries
+  ckv   (B, S, r)   compressed latent cache
+  kr    (B, S, Dr)  shared RoPE key cache
+  kv_len (B,)       valid cache length per sequence
+Output: out_lat (B, H, r) — the attention-weighted latent (the caller
+applies W_uv / wo).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mla_decode_dense(q_abs, q_r, ckv, kr, kv_len, scale):
+    scores = (jnp.einsum("bhr,bsr->bhs", q_abs.astype(jnp.float32),
+                         ckv.astype(jnp.float32)) +
+              jnp.einsum("bhd,bsd->bhs", q_r.astype(jnp.float32),
+                         kr.astype(jnp.float32))) * scale
+    s = ckv.shape[1]
+    mask = jnp.arange(s)[None, None, :] < kv_len[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(jnp.float32))

@@ -1,0 +1,30 @@
+"""mLSTM scan op with implementation dispatch (see ref.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.mlstm_scan import ref
+
+
+def mlstm_scan(q, k, v, i_pre, f_pre, *, chunk_size: int = 256,
+               initial_state=None, impl: str = "reference",
+               interpret: bool = False):
+    """Returns (h (B,S,H,dv), final_state)."""
+    if impl == "sequential":
+        return ref.mlstm_sequential(q, k, v, i_pre, f_pre,
+                                    initial_state=initial_state)
+    if impl == "reference":
+        return ref.mlstm_chunked(q, k, v, i_pre, f_pre,
+                                 chunk_size=chunk_size,
+                                 initial_state=initial_state)
+    if impl == "pallas":
+        from repro.kernels.mlstm_scan.mlstm_scan import mlstm_scan_pallas
+        return mlstm_scan_pallas(q, k, v, i_pre, f_pre,
+                                 chunk_size=chunk_size,
+                                 initial_state=initial_state,
+                                 interpret=interpret)
+    raise ValueError(f"unknown mlstm impl '{impl}'")
+
+
+def mlstm_decode_step(state, qt, kt, vt, it, ft):
+    return ref.mlstm_decode_step(state, qt, kt, vt, it, ft)

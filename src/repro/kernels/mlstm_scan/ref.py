@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for the xLSTM mLSTM (matrix-memory) scan.
+
+The mLSTM cell (xLSTM paper, arXiv:2405.04517) per head:
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        (matrix memory, (dk, dv))
+    n_t = f_t n_{t-1} + i_t k_t              (normalizer, (dk,))
+    h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+
+with exponential input gating stabilized in log space:
+    lf_t = logsigmoid(f~_t);  m_t = max(lf_t + m_{t-1}, i~_t)
+    f_t = exp(lf_t + m_{t-1} - m_t);  i_t = exp(i~_t - m_t)
+
+``mlstm_sequential`` is the direct recurrence (ground truth).
+``mlstm_chunked`` is the chunkwise-parallel form (flash-linear-attention
+style): quadratic within chunks of length Q, state carry across chunks,
+all in stabilized log space. Equal to sequential up to fp tolerance.
+
+Layouts: q/k (B, S, H, dk), v (B, S, H, dv), i_pre/f_pre (B, S, H).
+State: (C_hat (B,H,dk,dv), n_hat (B,H,dk), m (B,H)) where the true memory
+is C = C_hat (stabilizer folded into h via m).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _init_state(b, h, dk, dv):
+    return (jnp.zeros((b, h, dk, dv), jnp.float32),
+            jnp.zeros((b, h, dk), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+
+
+def mlstm_sequential(q, k, v, i_pre, f_pre, initial_state=None):
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    scale = dk ** -0.5
+    state = initial_state or _init_state(b, h, dk, dv)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp            # (B,H,dk), ..., (B,H)
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        fg = jnp.exp(lf + m - m_new)
+        ig = jnp.exp(it - m_new)
+        C = fg[..., None, None] * C + ig[..., None, None] * \
+            (kt[..., :, None] * vt[..., None, :])
+        n = fg[..., None] * n + ig[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C) * scale
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)) * scale,
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = (q.astype(jnp.float32).transpose(1, 0, 2, 3),
+          k.astype(jnp.float32).transpose(1, 0, 2, 3),
+          v.astype(jnp.float32).transpose(1, 0, 2, 3),
+          i_pre.astype(jnp.float32).transpose(1, 0, 2),
+          f_pre.astype(jnp.float32).transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(q.dtype), final
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, *, chunk_size: int = 256,
+                  initial_state=None):
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    scale = dk ** -0.5
+    orig_s = s
+    cq = min(chunk_size, s)
+    if s % cq != 0:
+        pad = cq - s % cq
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)   # pad: no input contribution
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=30.0)    # pad: f ~ 1 (keeps state)
+        s += pad
+    nc = s // cq
+
+    def rs(x, feat):  # (B, S, H, F) -> (NC, B, H, CQ, F)
+        return x.astype(jnp.float32).reshape(b, nc, cq, h, feat
+                                             ).transpose(1, 0, 3, 2, 4)
+
+    qc, kc, vc = rs(q, dk), rs(k, dk), rs(v, dv)
+    ic = i_pre.astype(jnp.float32).reshape(b, nc, cq, h).transpose(1, 0, 3, 2)
+    fc = f_pre.astype(jnp.float32).reshape(b, nc, cq, h).transpose(1, 0, 3, 2)
+    state = initial_state or _init_state(b, h, dk, dv)
+
+    idx = jnp.arange(cq)
+    tri = idx[:, None] >= idx[None, :]            # causal within chunk
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                           # (B,H,dk,dv),(B,H,dk),(B,H)
+        qb, kb, vb, ib, fb = inp                  # (B,H,CQ,*)
+        lf = jax.nn.log_sigmoid(fb)               # (B,H,CQ)
+        bcs = jnp.cumsum(lf, axis=-1)             # inclusive log-decay
+        g = bcs[..., -1]                          # total chunk decay
+        # --- intra-chunk log weights  D_ij = b_i - b_j + i~_j  (j <= i)
+        Dm = bcs[..., :, None] - bcs[..., None, :] + ib[..., None, :]
+        Dm = jnp.where(tri, Dm, -jnp.inf)
+        m_intra = jnp.max(Dm, axis=-1)            # (B,H,CQ)
+        # --- inter-chunk: query i sees state with decay b_i, stabilizer m
+        m_inter = bcs + m[..., None]
+        m_i = jnp.maximum(m_intra, m_inter)
+        intra = jnp.exp(Dm - m_i[..., None])      # (B,H,CQ,CQ)
+        qk = jnp.einsum("bhik,bhjk->bhij", qb, kb) * scale
+        w_intra = intra * qk
+        num = jnp.einsum("bhij,bhjv->bhiv", w_intra, vb)
+        den = jnp.sum(w_intra, axis=-1)
+        inter_w = jnp.exp(m_inter - m_i)          # (B,H,CQ)
+        num = num + inter_w[..., None] * \
+            jnp.einsum("bhik,bhkv->bhiv", qb, C) * scale
+        den = den + inter_w * jnp.einsum("bhik,bhk->bhi", qb, n) * scale
+        hshift = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # --- state update (stabilized by new m')
+        w_state = g[..., None] - bcs + ib         # log weight of k_j into C'
+        m_new = jnp.maximum(g + m, jnp.max(w_state, axis=-1))
+        carry_w = jnp.exp(g + m - m_new)
+        kw = jnp.exp(w_state - m_new[..., None])
+        C = carry_w[..., None, None] * C + \
+            jnp.einsum("bhj,bhjk,bhjv->bhkv", kw, kb, vb)
+        n = carry_w[..., None] * n + jnp.einsum("bhj,bhjk->bhk", kw, kb)
+        return (C, n, m_new), hshift
+
+    final, ys = jax.lax.scan(chunk_step, state, (qc, kc, vc, ic, fc))
+    out = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dv)[:, :orig_s]
+    return out.astype(q.dtype), final
+
+
+def mlstm_decode_step(state, qt, kt, vt, it, ft):
+    """Single-token recurrence. qt/kt (B,H,dk), vt (B,H,dv), it/ft (B,H)."""
+    C, n, m = state
+    dk = qt.shape[-1]
+    scale = dk ** -0.5
+    qt = qt.astype(jnp.float32)
+    kt = kt.astype(jnp.float32)
+    vt = vt.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(ft.astype(jnp.float32))
+    m_new = jnp.maximum(lf + m, it.astype(jnp.float32))
+    fg = jnp.exp(lf + m - m_new)
+    ig = jnp.exp(it - m_new)
+    C = fg[..., None, None] * C + ig[..., None, None] * \
+        (kt[..., :, None] * vt[..., None, :])
+    n = fg[..., None] * n + ig[..., None] * kt
+    num = jnp.einsum("bhk,bhkv->bhv", qt, C) * scale
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)) * scale,
+                      jnp.exp(-m_new))
+    return num / den[..., None], (C, n, m_new)

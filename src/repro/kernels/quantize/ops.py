@@ -1,0 +1,27 @@
+"""Int8 quant/dequant op with implementation dispatch (see ref.py)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize import ref
+
+
+def quantize_int8(
+    x: jnp.ndarray, *, block_size: int = 256,
+    key: Optional[jax.Array] = None,
+    impl: str = "reference", interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if impl == "reference":
+        return ref.quantize_int8(x, block_size=block_size, key=key)
+    if impl == "pallas":
+        from repro.kernels.quantize.quantize import quantize_int8_pallas
+        return quantize_int8_pallas(x, block_size=block_size, key=key,
+                                    interpret=interpret)
+    raise ValueError(f"unknown quantize impl '{impl}'")
+
+
+def dequantize_int8(q, scale, shape, block_size: int = 256):
+    return ref.dequantize_int8(q, scale, shape, block_size)

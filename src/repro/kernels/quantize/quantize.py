@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for per-block int8 quantization (grad compression).
+
+Used on the cross-pod (DCN) gradient reduction path: fp32 gradient shards
+are quantized to int8 + per-block fp32 scales (4.06x compression) before
+the pod-axis all-reduce. Stochastic rounding keeps the compressed update
+unbiased; the noise tensor is generated outside the kernel with
+jax.random so the kernel stays deterministic and testable.
+
+Grid tiles rows of a (num_blocks, block_size) view; absmax, scale and
+rounding are all VPU element-wise work — the kernel exists to keep the
+quantize fused and VMEM-resident next to the collective rather than
+round-tripping through HBM.
+
+Validated in interpret mode against ref.quantize_int8.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, noise_ref, q_ref, s_ref, *, stochastic: bool):
+    x = x_ref[...].astype(jnp.float32)                # (rows, block)
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    scaled = x / scale
+    if stochastic:
+        scaled = scaled + (noise_ref[...] - 0.5)
+    q = jnp.clip(jnp.round(scaled), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize_int8_pallas(
+    x: jnp.ndarray,
+    *,
+    block_size: int = 256,
+    key: Optional[jax.Array] = None,
+    rows_per_tile: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    padded = -(-n // block_size) * block_size
+    flat = jnp.pad(flat, (0, padded - n))
+    blocks = flat.reshape(-1, block_size)
+    nb = blocks.shape[0]
+    rows = min(rows_per_tile, nb)
+    pad_rows = (-nb) % rows
+    if pad_rows:
+        blocks = jnp.pad(blocks, ((0, pad_rows), (0, 0)))
+    nb_p = blocks.shape[0]
+    stochastic = key is not None
+    noise = (jax.random.uniform(key, blocks.shape) if stochastic
+             else jnp.zeros_like(blocks))
+
+    q, s = pl.pallas_call(
+        functools.partial(_quant_kernel, stochastic=stochastic),
+        grid=(nb_p // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, block_size), lambda i: (i, 0)),
+            pl.BlockSpec((rows, block_size), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, block_size), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb_p, block_size), jnp.int8),
+            jax.ShapeDtypeStruct((nb_p, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(blocks, noise)
+    return q[:nb], s[:nb, 0]

@@ -1,0 +1,36 @@
+"""Mamba2 SSD scan op with implementation dispatch (see ref.py)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ref
+
+
+def ssd_scan(
+    x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+    Bm: jnp.ndarray, Cm: jnp.ndarray, D: Optional[jnp.ndarray] = None,
+    *,
+    chunk_size: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,
+    impl: str = "reference",
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, final_state)."""
+    if impl == "sequential":
+        return ref.ssd_sequential(x, dt, A, Bm, Cm, D,
+                                  initial_state=initial_state)
+    if impl == "reference":
+        return ref.ssd_chunked(x, dt, A, Bm, Cm, D, chunk_size=chunk_size,
+                               initial_state=initial_state)
+    if impl == "pallas":
+        from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+        return ssd_scan_pallas(x, dt, A, Bm, Cm, D, chunk_size=chunk_size,
+                               initial_state=initial_state,
+                               interpret=interpret)
+    raise ValueError(f"unknown ssd impl '{impl}'")
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm, D=None):
+    return ref.ssd_decode_step(state, x, dt, A, Bm, Cm, D)

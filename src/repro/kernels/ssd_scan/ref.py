@@ -1,0 +1,166 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space dual) scan.
+
+Layouts:
+  x  (B, S, H, P)   channels grouped into H heads of dim P
+  dt (B, S, H)      post-softplus step sizes
+  A  (H,)           negative per-head decay (A < 0)
+  Bm (B, S, G, N)   input->state projection, G groups broadcast over heads
+  Cm (B, S, G, N)   state->output projection
+  D  (H,) or None   skip connection
+State: (B, H, P, N).
+
+``ssd_sequential`` is the direct recurrence (ground truth for tests).
+``ssd_chunked`` is the chunked SSD algorithm (Mamba2 paper, listing 1) —
+identical math, O(S/Q) sequential steps; the model lowers this on CPU and
+the Pallas kernel (ssd_scan.py) implements it with VMEM-tiled chunks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _broadcast_groups(m: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """(B, S, G, N) -> (B, S, H, N)."""
+    b, s, g, n = m.shape
+    rep = num_heads // g
+    if rep == 1:
+        return m
+    m = jnp.broadcast_to(m[:, :, :, None, :], (b, s, g, rep, n))
+    return m.reshape(b, s, num_heads, n)
+
+
+def ssd_sequential(
+    x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+    Bm: jnp.ndarray, Cm: jnp.ndarray, D: Optional[jnp.ndarray] = None,
+    initial_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    Bm = _broadcast_groups(Bm, h).astype(jnp.float32)
+    Cm = _broadcast_groups(Cm, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, None, :])            # (B, S, H)
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def step(state, inp):
+        xt, dat, dtt, bt, ct = inp                   # per-time slices
+        dbx = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, bt)
+        state = dat[:, :, None, None] * state + dbx
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dA.transpose(1, 0, 2),
+          dtf.transpose(1, 0, 2), Bm.transpose(1, 0, 2, 3),
+          Cm.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)                     # (B, S, H, P)
+    if D is not None:
+        y = y + xf * D[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """(..., Q) -> (..., Q, Q) lower-triangular segment sums.
+
+    out[..., i, j] = sum(a[..., j+1 : i+1]) for i >= j, -inf otherwise.
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+    Bm: jnp.ndarray, Cm: jnp.ndarray, D: Optional[jnp.ndarray] = None,
+    *,
+    chunk_size: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    orig_s = s
+    q = min(chunk_size, s)
+    if s % q != 0:
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    c = s // q
+
+    Bf = _broadcast_groups(Bm, h).astype(jnp.float32).reshape(b, c, q, h, n)
+    Cf = _broadcast_groups(Cm, h).astype(jnp.float32).reshape(b, c, q, h, n)
+    xf = x.astype(jnp.float32).reshape(b, c, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, c, q, h)
+    dA_log = dtf * A[None, None, None, :]            # (B, C, Q, H)
+    dA_log = dA_log.transpose(0, 3, 1, 2)            # (B, H, C, Q)
+    A_cum = jnp.cumsum(dA_log, axis=-1)              # (B, H, C, Q)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA_log))                     # (B, H, C, Q, Q)
+    Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        Cf, Bf, L, dtf[..., None] * xf)
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)  # (B, H, C, Q)
+    chunk_states = jnp.einsum("bcqhn,bhcq,bcqhp->bchpn",
+                              Bf, decay_states, dtf[..., None] * xf)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(A_cum[..., -1])            # (B, H, C)
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def chunk_step(state, inp):
+        st_c, dec_c = inp                            # (B,H,P,N), (B,H)
+        prev = state
+        state = dec_c[:, :, None, None] * state + st_c
+        return state, prev
+
+    xs = (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1))
+    final, prev_states = jax.lax.scan(chunk_step, h0, xs)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B, C, H, P, N)
+
+    # 4) inter-chunk (off-diagonal) output contribution
+    state_decay_out = jnp.exp(A_cum)                 # (B, H, C, Q)
+    Y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp",
+                       Cf, prev_states, state_decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)[:, :orig_s]
+    if D is not None:
+        y = y + x.astype(jnp.float32)[:, :orig_s] * D[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,        # (B, H, P, N)
+    x: jnp.ndarray,            # (B, H, P) one token
+    dt: jnp.ndarray,           # (B, H)
+    A: jnp.ndarray,            # (H,)
+    Bm: jnp.ndarray,           # (B, G, N)
+    Cm: jnp.ndarray,           # (B, G, N)
+    D: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, hh, p, n = state.shape
+    g = Bm.shape[1]
+    rep = hh // g
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, :])                   # (B, H)
+    dbx = jnp.einsum("bh,bhp,bhn->bhpn", dtf, xf, Bf)
+    state = dA[:, :, None, None] * state.astype(jnp.float32) + dbx
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cf)
+    if D is not None:
+        y = y + xf * D[None, :, None]
+    return y.astype(x.dtype), state

@@ -1,0 +1,44 @@
+"""Mesh construction (single-pod and multi-pod production meshes).
+
+Defined as functions — importing this module never touches jax device
+state, so test processes keep their 1-device world unless they opt in.
+
+Production target: TPU v5e pods of 256 chips. Single-pod mesh is
+(data=16, model=16); multi-pod adds a leading "pod" axis (2, 16, 16)
+whose collectives ride DCN — that is the slow/heterogeneous link where
+the HetSeq capacity planner and the compressed hierarchical reduction
+earn their keep.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes: ("pod","data") when pod exists."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,207 @@
+"""Sharding rules: parameter, optimizer, activation and cache layouts.
+
+Scheme (MaxText-style FSDP + TP, adapted per architecture):
+  * FSDP axes = ("pod","data") — every large matrix shards one dim over
+    FSDP (ZeRO-3; XLA all-gathers per layer inside the scan) and one over
+    "model" (Megatron TP). Optimizer moments share the param specs
+    (ZeRO-1 falls out for free).
+  * EP: MoE expert banks (E, d, ff) shard E over "model".
+  * Activations: batch over DP axes; head/ff internals over "model"
+    (applied via with_sharding_constraint inside the blocks).
+  * Caches: batch over DP; KV heads over "model" when divisible, else
+    the sequence dim shards over "model" (split-K decode — the MLA
+    latent-cache case).
+
+Every rule passes through :func:`fit_spec`, which drops an axis from the
+spec when the dimension is not divisible by the mesh axis size (e.g.
+glm4's 2 KV heads cannot split 16-way; xlstm's 4 heads likewise). This
+keeps all 10 architectures compiling on the same mesh — replication is
+the correct degenerate case, and the roofline shows its cost honestly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import dp_axes as mesh_dp_axes
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def fit_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop spec entries whose axis size does not divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, ax) == 0 and dim > 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# parameter rules: ordered (regex over path, spec-builder) pairs
+# --------------------------------------------------------------------------
+
+
+def _param_rules(fsdp, tp):
+    """Spec templates for the *unstacked* (per-layer) param shapes."""
+    return [
+        # embeddings / unembedding
+        (r"embed$",                P(fsdp, tp)),
+        (r"lm_head$",              P(fsdp, tp)),
+        # attention (GQA)
+        (r"attn/wq$",              P(fsdp, tp)),
+        (r"attn/wk$",              P(fsdp, tp)),
+        (r"attn/wv$",              P(fsdp, tp)),
+        (r"attn/wo$",              P(tp, fsdp)),
+        # MLA
+        (r"attn/w_dkv$",           P(fsdp, None)),
+        (r"attn/w_kr$",            P(fsdp, None)),
+        (r"attn/w_dq$",            P(fsdp, None)),
+        (r"attn/w_uq$",            P(None, tp)),
+        (r"attn/w_uk$",            P(None, tp)),
+        (r"attn/w_uv$",            P(None, tp)),
+        # MoE (EP over tp axis; shared expert like a dense MLP)
+        (r"moe/router$",           P(fsdp, None)),
+        (r"moe/w_gate$",           P(tp, fsdp, None)),
+        (r"moe/w_up$",             P(tp, fsdp, None)),
+        (r"moe/w_down$",           P(tp, None, fsdp)),
+        (r"moe/shared/w_gate$",    P(fsdp, tp)),
+        (r"moe/shared/w_up$",      P(fsdp, tp)),
+        (r"moe/shared/w_down$",    P(tp, fsdp)),
+        # dense MLP (also arctic dense-residual, zamba shared block)
+        (r"(mlp|dense)/w_gate$",   P(fsdp, tp)),
+        (r"(mlp|dense)/w_up$",     P(fsdp, tp)),
+        (r"(mlp|dense)/w_down$",   P(tp, fsdp)),
+        # mamba
+        (r"mamba/in_proj$",        P(fsdp, tp)),
+        (r"mamba/out_proj$",       P(tp, fsdp)),
+        (r"mamba/conv_w$",         P(None, tp)),
+        (r"mamba/conv_b$",         P(tp)),
+        (r"mamba/norm$",           P(tp)),
+        # xlstm mLSTM
+        (r"blk/w_z$",              P(fsdp, tp)),
+        (r"blk/w_u$",              P(fsdp, tp)),
+        (r"blk/w_q$",              P(None, tp)),
+        (r"blk/w_k$",              P(None, tp)),
+        (r"blk/w_v$",              P(None, tp)),
+        (r"blk/w_if$",             P(fsdp, None)),
+        (r"blk/w_down$",           P(tp, fsdp)),
+        (r"blk/conv_w$",           P(None, tp)),
+        (r"blk/conv_b$",           P(tp)),
+        (r"blk/(skip|out_norm)$",  P(tp)),
+        # xlstm sLSTM
+        (r"blk/w_ifzo$",           P(fsdp, tp)),
+        (r"blk/r_ifzo$",           P(None, None, tp)),
+        (r"blk/ffn_gate$",         P(fsdp, tp)),
+        (r"blk/ffn_up$",           P(fsdp, tp)),
+        (r"blk/ffn_down$",         P(tp, fsdp)),
+    ]
+
+
+_STACKED = re.compile(r"^(layers|mlstm_layers|slstm_layers)/")
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching an (eval_shape) params pytree."""
+    fsdp = mesh_dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    rules = _param_rules(fsdp, tp)
+
+    def spec_for(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        stacked = bool(_STACKED.match(key))
+        shape = leaf.shape
+        core_shape = shape[1:] if stacked else shape
+        for pat, spec in rules:
+            if re.search(pat, key):
+                fitted = fit_spec(core_shape, spec, mesh)
+                if stacked:
+                    return P(None, *fitted)
+                return fitted
+        # default: replicate (norm scales, biases, gates, small vectors)
+        return P()
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        params_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in paths_leaves])
+
+
+# --------------------------------------------------------------------------
+# batch / activation / cache rules
+# --------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, global_rows: int,
+                stub: Optional[bool] = None) -> Dict[str, P]:
+    """Specs for the packed train batch {"inputs","labels","weights"}."""
+    dp = mesh_dp_axes(mesh)
+    bspec = dp if global_rows % _axis_size(mesh, dp) == 0 else None
+    stub = cfg.frontend != "token" if stub is None else stub
+    return {
+        "inputs": P(bspec, None, None) if stub else P(bspec, None),
+        "labels": P(bspec, None),
+        "weights": P(bspec, None),
+    }
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh,
+                batch: int) -> Any:
+    """Specs for the decode cache pytree (leading L/group dim = None)."""
+    dp = mesh_dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    bspec = dp if batch % _axis_size(mesh, dp) == 0 else None
+
+    def spec_for(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        shape = leaf.shape
+        if re.search(r"(^|/)(k|v|attn_k|attn_v)$", key):
+            # (L, B, S, Hkv, Dh): heads over tp when divisible, else seq
+            if cfg.num_kv_heads % _axis_size(mesh, tp or "model") == 0 \
+                    if tp else False:
+                return fit_spec(shape, P(None, bspec, None, tp, None), mesh)
+            return fit_spec(shape, P(None, bspec, tp, None, None), mesh)
+        if re.search(r"c_kv$|k_rope$", key):
+            # MLA latent (L, B, S, r): split-K — sequence over tp
+            return fit_spec(shape, P(None, bspec, tp, None), mesh)
+        if re.search(r"conv$", key):
+            return fit_spec(shape, P(None, bspec, None, tp), mesh)
+        if re.search(r"ssm$", key):
+            # (L, B, H, P, N): heads over tp
+            return fit_spec(shape, P(None, bspec, tp, None, None), mesh)
+        if key.startswith("mlstm") or key.startswith("slstm"):
+            return fit_spec(shape, P(None, bspec), mesh)
+        return fit_spec(shape, P(None, bspec), mesh)
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in paths_leaves])
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,432 @@
+"""Step builders: jitted train / prefill / decode with explicit shardings.
+
+``build_train_step`` assembles the full HetSeq step:
+  1. weighted objective over the packed (dummy-padded) global batch —
+     per-token weights make heterogeneous capacity exact (core M1/M3);
+  2. optional gradient accumulation scan (core M4);
+  3. gradient reduction:
+       * "allreduce"    — paper-faithful: XLA's automatic reduction from
+         the shardings (FSDP => reduce-scatter + all-gather);
+       * "hierarchical" — beyond-paper: params replicated over "pod",
+         FSDP over "data"; in-pod reduction stays automatic (ICI), the
+         cross-pod leg is an explicit shard_map(axis_names={"pod"})
+         collective, optionally int8-compressed with error feedback;
+  4. AdamW update (optimizer state sharded like params = ZeRO-1).
+
+``input_specs`` provides ShapeDtypeStruct stand-ins for every cell of
+the (architecture x shape) grid — the dry-run lowers against these, no
+allocation ever happens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig)
+from repro.core import accumulate as acc
+from repro.core import weighting
+from repro.kernels.quantize import ops as q_ops
+from repro.kernels.quantize import ref as q_ref
+from repro.launch import sharding as shr
+from repro.launch.mesh import dp_axes as mesh_dp_axes, dp_size, tp_axis
+from repro.models.blocks import ParallelCtx
+from repro.models.model import Model
+from repro.optim import adam, lamb, schedules
+
+
+def make_parallel_ctx(mesh: Optional[Mesh]) -> ParallelCtx:
+    if mesh is None:
+        return ParallelCtx()
+    return ParallelCtx(mesh=mesh, dp_axes=mesh_dp_axes(mesh),
+                       tp_axis=tp_axis(mesh))
+
+
+# --------------------------------------------------------------------------
+# train state
+# --------------------------------------------------------------------------
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adam.AdamState
+    err: Any                       # error-feedback pytree or () when unused
+
+
+def _err_enabled(tcfg: TrainConfig, mesh: Mesh) -> bool:
+    return (tcfg.het.grad_reduction == "hierarchical"
+            and tcfg.het.compression != "none"
+            and tcfg.het.error_feedback
+            and "pod" in mesh.axis_names)
+
+
+def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh):
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(
+        functools.partial(adam.init_state, cfg=tcfg.optimizer), params_shape)
+    if _err_enabled(tcfg, mesh):
+        pods = mesh.shape["pod"]
+        err_shape = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((pods,) + p.shape, jnp.float32),
+            params_shape)
+    else:
+        err_shape = ()
+    return TrainState(params=params_shape, opt=opt_shape, err=err_shape)
+
+
+def state_specs(model: Model, tcfg: TrainConfig, mesh: Mesh) -> TrainState:
+    shapes = state_shapes(model, tcfg, mesh)
+    hier = tcfg.het.grad_reduction == "hierarchical"
+    pspecs = shr.param_specs(model.cfg, shapes.params, mesh)
+    if hier and "pod" in mesh.axis_names:
+        # hierarchical mode: params replicated across pods (FSDP = data
+        # only) so the cross-pod gradient leg is ours to schedule
+
+        def strip_pod(spec: P) -> P:
+            out = []
+            for ax in spec:
+                if isinstance(ax, tuple):
+                    kept = tuple(a for a in ax if a != "pod")
+                    out.append(kept if kept else None)
+                else:
+                    out.append(None if ax == "pod" else ax)
+            return P(*out)
+
+        pspecs = jax.tree.map(strip_pod, pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        # token-embedding gathers with a sharded vocab dim hit an XLA
+        # SPMD-partitioner bug inside partially-manual regions; shard the
+        # table on d_model only (gather pass-through dim) in this mode
+        if isinstance(pspecs, dict) and "embed" in pspecs:
+            tp = "model" if "model" in mesh.axis_names else None
+            vshape = shapes.params["embed"].shape
+            pspecs = dict(pspecs)
+            pspecs["embed"] = shr.fit_spec(vshape, P(None, tp), mesh)
+    ospecs = adam.AdamState(step=P(), m=pspecs, v=pspecs)
+    if shapes.err == ():
+        especs: Any = ()
+    else:
+        especs = jax.tree.map(lambda s: P("pod", *s), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    return TrainState(params=pspecs, opt=ospecs, err=especs)
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, mesh: Mesh,
+                     key) -> TrainState:
+    """Initialize on-device with the right shardings (M8: same init
+    everywhere — a single global RNG key IS the broadcast)."""
+    specs = state_specs(model, tcfg, mesh)
+    shapes = state_shapes(model, tcfg, mesh)
+
+    def init(k):
+        params = model.init_params(k)
+        opt = adam.init_state(params, tcfg.optimizer)
+        if shapes.err == ():
+            err: Any = ()
+        else:
+            err = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), shapes.err)
+        return TrainState(params=params, opt=opt, err=err)
+
+    with jax.set_mesh(mesh):
+        return jax.jit(init, out_shardings=shr.named(mesh, specs))(key)
+
+
+def init_params_sharded(model: Model, mesh: Mesh, key):
+    """Initialize bare params with the production shardings (serving)."""
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = shr.param_specs(model.cfg, params_shape, mesh)
+    with jax.set_mesh(mesh):
+        return jax.jit(model.init_params,
+                       out_shardings=shr.named(mesh, pspecs))(key)
+
+
+def init_cache_sharded(model: Model, shape: ShapeConfig, mesh: Mesh):
+    """Zero cache with the decode-step shardings."""
+    b = shape.global_batch
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_cache, b, shape.seq_len))
+    cspecs = shr.cache_specs(model.cfg, cache_shape, mesh, b)
+    with jax.set_mesh(mesh):
+        return jax.jit(functools.partial(model.init_cache, b,
+                                         shape.seq_len),
+                       out_shardings=shr.named(mesh, cspecs))()
+
+
+# --------------------------------------------------------------------------
+# gradient reduction modes
+# --------------------------------------------------------------------------
+
+
+def _quant_lastdim(x: jnp.ndarray, block: int):
+    """Blockwise int8 quantization along the LAST dim only.
+
+    Unlike the flatten-everything kernel wrapper, this preserves the
+    sharding of every other dim — flattening a (data, model)-sharded
+    matrix forces XLA to all-gather it before the reshape (measured:
+    38 GB of replicated gradient copies in the hier step).
+    """
+    last = x.shape[-1]
+    bs = min(block, last)
+    pad = (-last) % bs
+    if pad:
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+    nb = x.shape[-1] // bs
+    blocks = x.reshape(*x.shape[:-1], nb, bs)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0], last
+
+
+def _dequant_lastdim(q: jnp.ndarray, scale: jnp.ndarray, last: int):
+    deq = q.astype(jnp.float32) * scale[..., None]
+    deq = deq.reshape(*deq.shape[:-2], -1)
+    return deq[..., :last]
+
+
+def _cross_pod_reduce(grads: Any, err: Any, compress: str,
+                      block_size: int = 256) -> Tuple[Any, Any]:
+    """Inside shard_map(manual={"pod"}): reduce grads across pods.
+
+    grads: this pod's gradient contribution (auto-sharded over data).
+    err:   (1, *shape) this pod's persistent error-feedback state.
+    """
+    def leaf(g, e):
+        if compress == "none":
+            return jax.lax.psum(g, "pod"), e
+        gf = g.astype(jnp.float32)
+        if gf.ndim == 1:
+            gf = gf[None]
+            squeeze = True
+        else:
+            squeeze = False
+        corrected = gf + (e.reshape(gf.shape).astype(jnp.float32)
+                          if e is not None else 0.0)
+        q, s, last = _quant_lastdim(corrected, block_size)
+        deq_local = _dequant_lastdim(q, s, last)
+        new_e = ((corrected - deq_local).reshape(e.shape)
+                 if e is not None else e)
+        # int8 payload + per-block scales are what cross the DCN link;
+        # gathered along a NEW leading pod axis (all shardings preserved)
+        q_all = jax.lax.all_gather(q, "pod")          # (pods, ..., nb, bs)
+        s_all = jax.lax.all_gather(s, "pod")          # (pods, ..., nb)
+        deq = jnp.sum(q_all.astype(jnp.float32) * s_all[..., None],
+                      axis=0)
+        out = deq.reshape(*deq.shape[:-2], -1)[..., :last]
+        if squeeze:
+            out = out[0]
+        return out.astype(g.dtype), new_e
+
+    if err == ():
+        outs = jax.tree.map(lambda g: leaf(g, None)[0], grads)
+        return outs, ()
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    pairs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([p[0] for p in pairs]),
+            treedef.unflatten([p[1] for p in pairs]))
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+
+def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
+                     ) -> Callable[[TrainState, Dict], Tuple[TrainState,
+                                                             Dict]]:
+    cfg = model.cfg
+    ctx = make_parallel_ctx(mesh)
+    ocfg = tcfg.optimizer
+    accum = max(1, tcfg.het.accum_steps)
+    hier = (tcfg.het.grad_reduction == "hierarchical"
+            and "pod" in mesh.axis_names)
+    compress = tcfg.het.compression if hier else "none"
+    n_dp = dp_size(mesh)
+
+    # inside the pod-manual region the "pod" axis must not appear in
+    # sharding constraints — the inner context is data/model only
+    inner_ctx = (ParallelCtx(mesh=mesh, dp_axes=("data",),
+                             tp_axis=tp_axis(mesh)) if hier else ctx)
+    inner_dp = n_dp // mesh.shape["pod"] if hier else n_dp
+
+    def compute_grads(params, batch):
+        """Returns (grad_of_sums, obj_sum, weight_sum) — unscaled."""
+        def objective(p, b):
+            o, w, _ = model.loss_fn(p, b, inner_ctx)
+            return o, w
+
+        grad_fn = jax.value_and_grad(objective, has_aux=True)
+        if accum == 1:
+            (o, w), g = grad_fn(params, batch)
+            return g, o, w
+        mbs = acc.split_microbatches(batch, accum, num_ranks=inner_dp)
+
+        def body(carry, mb):
+            g_acc, o_acc, w_acc = carry
+            (o, w), g = grad_fn(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                 g_acc, g)
+            return (g_acc, o_acc + o, w_acc + w), None
+
+        # accumulation carry dtype: fp32, except when params are stored
+        # bf16 (arctic/deepseek giants) where an fp32 carry alone would
+        # blow the 16 GB budget — bf16 carry, documented in EXPERIMENTS
+        def carry_dtype(p):
+            return p.dtype if p.dtype == jnp.bfloat16 else jnp.float32
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, carry_dtype(p)), params)
+        (g, o, w), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32),
+                   jnp.zeros((), jnp.float32)), mbs)
+        return g, o, w
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if hier:
+            pspecs_in = state_specs(model, tcfg, mesh).params
+
+            def pod_local(params, b, err):
+                g, o, w = compute_grads(params, b)
+                # inside the partially-manual region XLA's sharding
+                # propagation can lose the (data, model) layout of the
+                # gradients; re-pin them to the param specs so the pod
+                # exchange moves shards, not replicated leaves
+                g = jax.tree.map(
+                    lambda gr, s: jax.lax.with_sharding_constraint(gr, s),
+                    g, pspecs_in)
+                g, new_err = _cross_pod_reduce(g, err, compress)
+                return g, jax.lax.psum(o, "pod"), jax.lax.psum(w, "pod"), \
+                    new_err
+
+            grads, o, w, new_err = jax.shard_map(
+                pod_local, mesh=mesh,
+                in_specs=(P(), P("pod"), P("pod") if state.err != ()
+                          else P()),
+                out_specs=(P(), P(), P(), P("pod") if state.err != ()
+                           else P()),
+                axis_names={"pod"}, check_vma=False,
+            )(state.params, batch, state.err)
+        else:
+            grads, o, w = compute_grads(state.params, batch)
+            new_err = state.err
+        loss = weighting.finalize(o, w)
+        grads = weighting.scale_grads(grads, w)
+        lr = schedules.learning_rate(ocfg, state.opt.step + 1)
+        opt_apply = (lamb.apply_update if ocfg.name == "lamb"
+                     else adam.apply_update)
+        params, opt, met = opt_apply(state.params, grads,
+                                     state.opt, ocfg, lr)
+        metrics = {"loss": loss, "weight": w, **met}
+        return TrainState(params=params, opt=opt, err=new_err), metrics
+
+    specs = state_specs(model, tcfg, mesh)
+    bspecs = shr.batch_specs(cfg, mesh, tcfg.shape.global_batch)
+    return jax.jit(
+        step,
+        in_shardings=(shr.named(mesh, specs), shr.named(mesh, bspecs)),
+        out_shardings=(shr.named(mesh, specs), None),
+        donate_argnums=(0,),
+    )
+
+
+# --------------------------------------------------------------------------
+# serve steps
+# --------------------------------------------------------------------------
+
+
+def build_prefill_step(model: Model, shape: ShapeConfig, mesh: Mesh):
+    cfg = model.cfg
+    ctx = make_parallel_ctx(mesh)
+
+    def prefill(params, inputs):
+        return model.prefill(params, inputs, ctx, max_len=shape.seq_len)
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = shr.param_specs(cfg, params_shape, mesh)
+    dp = mesh_dp_axes(mesh)
+    b = shape.global_batch
+    bspec = dp if b % dp_size(mesh) == 0 else None
+    in_spec = (P(bspec, None, None) if cfg.frontend != "token"
+               else P(bspec, None))
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_cache, b, shape.seq_len))
+    cspecs = shr.cache_specs(cfg, cache_shape, mesh, b)
+    logit_spec = shr.fit_spec((b, cfg.vocab_size), P(bspec, "model"), mesh)
+    return jax.jit(
+        prefill,
+        in_shardings=(shr.named(mesh, pspecs),
+                      NamedSharding(mesh, in_spec)),
+        out_shardings=(NamedSharding(mesh, logit_spec),
+                       shr.named(mesh, cspecs)),
+    )
+
+
+def build_decode_step(model: Model, shape: ShapeConfig, mesh: Mesh):
+    cfg = model.cfg
+    ctx = make_parallel_ctx(mesh)
+
+    def decode(params, tokens, cache, pos):
+        return model.decode(params, tokens, cache, pos, ctx)
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = shr.param_specs(cfg, params_shape, mesh)
+    dp = mesh_dp_axes(mesh)
+    b = shape.global_batch
+    bspec = dp if b % dp_size(mesh) == 0 else None
+    tok_spec = (P(bspec, None) if cfg.frontend != "token" else P(bspec))
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_cache, b, shape.seq_len))
+    cspecs = shr.cache_specs(cfg, cache_shape, mesh, b)
+    logit_spec = shr.fit_spec((b, cfg.vocab_size), P(bspec, "model"), mesh)
+    return jax.jit(
+        decode,
+        in_shardings=(shr.named(mesh, pspecs),
+                      NamedSharding(mesh, tok_spec),
+                      shr.named(mesh, cspecs), None),
+        out_shardings=(NamedSharding(mesh, logit_spec),
+                       shr.named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, zero allocation)
+# --------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model,
+                kind: Optional[str] = None) -> Dict[str, Any]:
+    """Stand-ins for every model input of one (arch x shape) cell.
+
+    train  : packed batch {"inputs","labels","weights"}
+    prefill: {"inputs"}
+    decode : {"tokens", "cache", "pos"} — one new token against a
+             seq_len-deep cache (the assigned decode_* semantics).
+    """
+    kind = kind or shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    stub = cfg.frontend != "token"
+    if kind == "train":
+        inp = (jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+               if stub else jax.ShapeDtypeStruct((b, s), i32))
+        return {"inputs": inp,
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+                "weights": jax.ShapeDtypeStruct((b, s), f32)}
+    if kind == "prefill":
+        inp = (jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+               if stub else jax.ShapeDtypeStruct((b, s), i32))
+        return {"inputs": inp}
+    if kind == "decode":
+        cache = jax.eval_shape(functools.partial(model.init_cache, b, s))
+        tok = (jax.ShapeDtypeStruct((b, cfg.d_model), jnp.bfloat16)
+               if stub else jax.ShapeDtypeStruct((b,), i32))
+        return {"tokens": tok, "cache": cache,
+                "pos": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(kind)

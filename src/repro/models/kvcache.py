@@ -1,0 +1,144 @@
+"""KV caches and single-token decode attention (GQA + absorbed MLA).
+
+Cache layouts (per layer; stacked with a leading L dim by the stack):
+  GQA : k/v (B, S_max, Hkv, Dh) in compute dtype
+  MLA : c_kv (B, S_max, r) latent + k_rope (B, S_max, Dr) — the
+        compressed-latent cache that makes DeepSeek-V2 decode cheap.
+
+Decode attention is single-query attention over the cache with a
+``kv_len`` mask; MLA uses the *absorbed* formulation: W_uk is folded into
+the query and W_uv into the output so the latent is never decompressed —
+scores are (B, H, S) against the shared latent, MQA-style.
+
+Sharding at scale (launch/sharding.py): caches shard batch over the DP
+axes; when per-device batch is small and the cache is large (deepseek
+decode_32k), the sequence dim shards over "model" instead and the
+softmax is computed with a cross-shard logsumexp fix-up (split-K) — see
+launch/steps.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.models.blocks import (ParallelCtx, _cast, apply_rope,
+                                 attention_qkv, batch_spec, constrain,
+                                 mla_latent, mla_queries)
+
+
+# --------------------------------------------------------------------------
+# cache constructors
+# --------------------------------------------------------------------------
+
+
+def init_gqa_cache(cfg: ModelConfig, num_layers: int, batch: int,
+                   max_len: int) -> Dict[str, jnp.ndarray]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    shape = (num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt)}
+
+
+def init_mla_cache(cfg: ModelConfig, num_layers: int, batch: int,
+                   max_len: int) -> Dict[str, jnp.ndarray]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((num_layers, batch, max_len, m.kv_lora_rank), cdt),
+        "k_rope": jnp.zeros((num_layers, batch, max_len, m.rope_head_dim),
+                            cdt),
+    }
+
+
+# --------------------------------------------------------------------------
+# GQA decode
+# --------------------------------------------------------------------------
+
+
+def attention_decode(params, x: jnp.ndarray, cfg: ModelConfig,
+                     ctx: ParallelCtx, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray):
+    """One-token attention. x (B, 1, d); caches (B, S_max, Hkv, Dh).
+
+    ``pos`` is the scalar index of the new token (kv_len becomes pos+1).
+    Returns (y (B, 1, d), (k_cache, v_cache) updated).
+    """
+    b = x.shape[0]
+    positions = jnp.reshape(pos, (1,))
+    q, k, v = attention_qkv(params, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    kv_len = jnp.full((b,), pos + 1, jnp.int32)
+    # dense single-query attention: with the cache sequence dim sharded
+    # over "model" (split-K spec), XLA partitions the softmax reduction
+    # across ranks automatically. A chunked python-level loop over the
+    # sharded dim BREAKS that (each chunk broadcast to all ranks) —
+    # measured +60% ICI — see EXPERIMENTS.md §Perf (refuted hypothesis).
+    out = attn_ref.mha_dense(q, k_cache, v_cache, causal=False,
+                             kv_len=kv_len)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    y = out @ _cast(params["wo"], cfg.compute_dtype)
+    return constrain(y, ctx, batch_spec(ctx, None, None)), (k_cache, v_cache)
+
+
+# --------------------------------------------------------------------------
+# MLA decode (absorbed, latent-space attention)
+# --------------------------------------------------------------------------
+
+
+def mla_decode(params, x: jnp.ndarray, cfg: ModelConfig, ctx: ParallelCtx,
+               ckv_cache: jnp.ndarray, kr_cache: jnp.ndarray,
+               pos: jnp.ndarray):
+    """One-token MLA attention over the compressed-latent cache.
+
+    x (B, 1, d); ckv_cache (B, S_max, r); kr_cache (B, S_max, Dr).
+
+    Dense (non-chunked) on purpose: the latent cache's sequence dim is
+    sharded over "model" (split-K, launch/sharding.py) and XLA
+    partitions the softmax + weighted-sum reductions across ranks
+    automatically. A host-level chunk loop over the sharded dim forces
+    per-chunk broadcasts instead (+60% ICI measured) — refuted §Perf
+    hypothesis; the one-HBM-pass variant belongs in a Pallas kernel.
+    """
+    b = x.shape[0]
+    m, h = cfg.mla, cfg.num_heads
+    cdt = cfg.compute_dtype
+    positions = jnp.reshape(pos, (1,))
+    q_nope, q_rope = mla_queries(params, x, cfg, positions)  # (B,1,H,*)
+    c_kv, k_r = mla_latent(params, x, cfg, positions)        # (B,1,r),(B,1,Dr)
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        kr_cache, k_r.astype(kr_cache.dtype), (0, pos, 0))
+
+    # absorb W_uk into the query: q_abs[b,h,r] = q_nope . W_uk[.,h,.]
+    w_uk = _cast(params["w_uk"], cdt).reshape(
+        m.kv_lora_rank, h, m.nope_head_dim)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32).astype(cdt)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv_cache,
+                         preferred_element_type=jnp.float32) +
+              jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(cdt),
+                         kr_cache,
+                         preferred_element_type=jnp.float32)) * scale
+    s_max = ckv_cache.shape[1]
+    mask = jnp.arange(s_max)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache,
+                         preferred_element_type=jnp.float32)
+    w_uv = _cast(params["w_uv"], cdt).reshape(
+        m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat.astype(cdt), w_uv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(cdt)
+    y = out @ _cast(params["wo"], cdt)
+    return (constrain(y, ctx, batch_spec(ctx, None, None)),
+            (ckv_cache, kr_cache))
+

@@ -1,0 +1,113 @@
+"""Model facade: build_model(cfg) -> init / loss / prefill / decode.
+
+The training loss follows the HetSeq aggregation contract (paper M1/M3):
+every token carries a weight (0 for dummy/padding tokens); ``loss_fn``
+returns the *weighted loss sum* and the *weight sum* — never a local
+mean — so any split of the batch across heterogeneous workers aggregates
+to exactly the single-process loss. Gradient accumulation and the DP
+reduction both divide by the summed weight once, at the end
+(core/accumulate.py, launch/steps.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels.cross_entropy import ops as ce_ops
+from repro.models import transformer as tr
+from repro.models.blocks import LOCAL_CTX, ParallelCtx
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(
+        functools.partial(tr.init_params, cfg), jax.random.PRNGKey(0))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.moe.enabled:
+        mo = cfg.moe
+        per_expert = 3 * cfg.d_model * mo.expert_d_ff
+        total -= cfg.num_layers * (mo.num_experts - mo.top_k) * per_expert
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Bundle of pure functions over a fixed config."""
+
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Any]
+    loss_fn: Callable[..., Tuple[jnp.ndarray, jnp.ndarray, Dict]]
+    logits_fn: Callable[..., jnp.ndarray]
+    prefill: Callable[..., Tuple[jnp.ndarray, Any]]
+    decode: Callable[..., Tuple[jnp.ndarray, Any]]
+    init_cache: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    def init_params(key):
+        return tr.init_params(cfg, key)
+
+    def loss_fn(params, batch: Dict[str, jnp.ndarray],
+                ctx: ParallelCtx = LOCAL_CTX,
+                ce_impl: str = "reference"):
+        """batch: inputs (B,S)[int] or (B,S,d)[stub], labels (B,S) int32,
+        weights (B,S) f32 (0 => dummy token, paper M3).
+
+        Returns (objective_sum, weight_sum, metrics). objective_sum is
+        differentiable; divide by (globally summed) weight_sum once.
+        """
+        x = tr.embed_tokens(params, batch["inputs"], cfg, ctx)
+        hidden, aux = tr.hidden_states(params, x, cfg, ctx)
+        b, s, d = hidden.shape
+        lm_w = tr.lm_head_matrix(params, cfg)
+        loss_sum, w_sum = ce_ops.weighted_cross_entropy(
+            hidden.reshape(b * s, d), lm_w,
+            batch["labels"].reshape(-1).astype(jnp.int32),
+            batch["weights"].reshape(-1).astype(jnp.float32),
+            label_smoothing=batch.get("label_smoothing", 0.0)
+            if isinstance(batch.get("label_smoothing", 0.0), float) else 0.0,
+            logit_softcap=cfg.logit_softcap,
+            impl=ce_impl)
+        # fold the MoE aux loss in as a per-token penalty so that
+        # objective_sum / weight_sum == ce_mean + aux (accumulation-exact)
+        objective_sum = loss_sum + aux * jax.lax.stop_gradient(w_sum)
+        metrics = {"ce_sum": loss_sum, "aux": aux}
+        return objective_sum, w_sum, metrics
+
+    def logits_fn(params, inputs, ctx: ParallelCtx = LOCAL_CTX):
+        x = tr.embed_tokens(params, inputs, cfg, ctx)
+        hidden, _ = tr.hidden_states(params, x, cfg, ctx)
+        return tr.unembed(params, hidden, cfg, ctx)
+
+    def prefill(params, inputs, ctx: ParallelCtx = LOCAL_CTX,
+                max_len: Optional[int] = None):
+        """Returns (next-token logits (B, V), cache)."""
+        s = inputs.shape[1]
+        max_len = max_len or s
+        x = tr.embed_tokens(params, inputs, cfg, ctx)
+        hidden, cache = tr.prefill(params, x, cfg, ctx, max_len)
+        logits = tr.unembed(params, hidden[:, -1:, :], cfg, ctx)[:, 0, :]
+        return logits, cache
+
+    def decode(params, inputs, cache, pos, ctx: ParallelCtx = LOCAL_CTX):
+        """inputs: token ids (B,) or stub embeds (B, d). pos: scalar int."""
+        if cfg.frontend == "token":
+            x = tr.embed_tokens(params, inputs[:, None], cfg, ctx)
+        else:
+            x = tr.embed_tokens(params, inputs[:, None, :], cfg, ctx)
+        hidden, cache = tr.decode_step(params, x, cfg, ctx, cache, pos)
+        logits = tr.unembed(params, hidden, cfg, ctx)[:, 0, :]
+        return logits, cache
+
+    def init_cache(batch: int, max_len: int):
+        return tr.init_cache(cfg, batch, max_len)
+
+    return Model(cfg=cfg, init_params=init_params, loss_fn=loss_fn,
+                 logits_fn=logits_fn, prefill=prefill, decode=decode,
+                 init_cache=init_cache)

@@ -1,0 +1,167 @@
+"""Mamba2 (SSD) block — used by zamba2 (hybrid) and available standalone.
+
+Structure follows the Mamba2 reference: fused in_proj producing
+[z, x, B, C, dt], causal depthwise conv over [x, B, C], softplus dt with
+bias, SSD chunked scan (kernels/ssd_scan), gated RMSNorm, out_proj.
+
+State for decode: (conv_state (B, K-1, conv_ch), ssm_state (B, H, P, N)).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.models.blocks import ParallelCtx, _cast, batch_spec, constrain, dense_init
+
+
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = s.num_heads or d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.ngroups * s.state_dim
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads
+    return d_inner, nheads, conv_ch, d_in_proj
+
+
+def init_mamba(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    dt = jnp.dtype(cfg.param_dtype)
+    s = cfg.ssm
+    d_inner, nheads, conv_ch, d_in_proj = mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 init)
+    u = jax.random.uniform(ks[2], (nheads,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))    # inv_softplus
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, d_in_proj), dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, conv_ch),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)
+                         ).astype(dt),
+        "D": jnp.ones((nheads,), dt),
+        "dt_bias": dt_bias.astype(dt),
+        "norm": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(ks[3], (d_inner, cfg.d_model), dt,
+                               fan_in=d_inner),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x (B, S, C); w (K, C). Returns (y, tail).
+
+    ``init`` is the (B, K-1, C) left-context from a previous segment (decode
+    prefill chaining); tail is the new left-context after this segment.
+    """
+    bsz, s, c = x.shape
+    k = w.shape[0]
+    if init is None:
+        init = jnp.zeros((bsz, k - 1, c), x.dtype)
+    xp = jnp.concatenate([init, x], axis=1)            # (B, S+K-1, C)
+    tail = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros((bsz, 0, c), x.dtype)
+    y = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    y = y + b.astype(jnp.float32)[None, None, :]
+    return y.astype(x.dtype), tail
+
+
+def _split_zxbcdt(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, conv_ch, _ = mamba_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xBC, dt
+
+
+def _split_xbc(xBC: jnp.ndarray, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, _, _, _ = mamba_dims(cfg)
+    gn = s.ngroups * s.state_dim
+    x = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + gn]
+    Cm = xBC[..., d_inner + gn:]
+    return x, Bm, Cm
+
+
+def mamba_block(params, x: jnp.ndarray, cfg: ModelConfig, ctx: ParallelCtx,
+                initial_state: Optional[Tuple] = None,
+                return_state: bool = False):
+    """x (B, S, d_model) -> y (B, S, d_model) [, (conv_state, ssm_state)]."""
+    s = cfg.ssm
+    bsz, seq, _ = x.shape
+    d_inner, nheads, conv_ch, _ = mamba_dims(cfg)
+    cdt = cfg.compute_dtype
+
+    zxbcdt = x @ _cast(params["in_proj"], cdt)
+    zxbcdt = constrain(zxbcdt, ctx, batch_spec(ctx, None, ctx.tp_axis))
+    z, xBC, dt = _split_zxbcdt(zxbcdt, cfg)
+    conv_init = initial_state[0] if initial_state is not None else None
+    xBC, conv_tail = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                  conv_init)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = _split_xbc(xBC, cfg)
+    xs = xs.reshape(bsz, seq, nheads, s.head_dim)
+    Bm = Bm.reshape(bsz, seq, s.ngroups, s.state_dim)
+    Cm = Cm.reshape(bsz, seq, s.ngroups, s.state_dim)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) +
+                          params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    ssm_init = initial_state[1] if initial_state is not None else None
+    y, final = ssd_ops.ssd_scan(
+        xs, dtv, A, Bm, Cm, params["D"].astype(jnp.float32),
+        chunk_size=s.chunk_size, initial_state=ssm_init,
+        impl="reference")
+    y = y.reshape(bsz, seq, d_inner)
+    y = constrain(y, ctx, batch_spec(ctx, None, ctx.tp_axis))
+    from repro.models.blocks import rms_norm_gated
+    y = rms_norm_gated(y, z, params["norm"])
+    out = y @ _cast(params["out_proj"], cdt)
+    out = constrain(out, ctx, batch_spec(ctx, None, None))
+    if return_state:
+        return out, (conv_tail, final.astype(cdt))
+    return out
+
+
+def mamba_decode_step(params, x: jnp.ndarray, cfg: ModelConfig,
+                      ctx: ParallelCtx, state: Tuple):
+    """One-token decode. x (B, 1, d); state (conv (B,K-1,C), ssm (B,H,P,N))."""
+    s = cfg.ssm
+    bsz = x.shape[0]
+    d_inner, nheads, conv_ch, _ = mamba_dims(cfg)
+    cdt = cfg.compute_dtype
+    conv_state, ssm_state = state
+
+    zxbcdt = (x[:, 0, :] @ _cast(params["in_proj"], cdt))   # (B, dproj)
+    z, xBC, dt = _split_zxbcdt(zxbcdt, cfg)
+    # conv over the (K-1) carried inputs + current
+    window = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (B,K,C)
+    new_conv = window[:, 1:, :]
+    w = params["conv_w"].astype(jnp.float32)                 # (K, C)
+    xBC = jnp.sum(window.astype(jnp.float32) * w[None], axis=1) + \
+        params["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(xBC).astype(cdt)
+    xs, Bm, Cm = _split_xbc(xBC, cfg)
+    xs = xs.reshape(bsz, nheads, s.head_dim)
+    Bm = Bm.reshape(bsz, s.ngroups, s.state_dim)
+    Cm = Cm.reshape(bsz, s.ngroups, s.state_dim)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) +
+                          params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, ssm_new = ssd_ops.ssd_decode_step(
+        ssm_state.astype(jnp.float32), xs, dtv, A, Bm, Cm,
+        params["D"].astype(jnp.float32))
+    y = y.reshape(bsz, d_inner)
+    from repro.models.blocks import rms_norm_gated
+    y = rms_norm_gated(y, z, params["norm"])
+    out = (y @ _cast(params["out_proj"], cdt))[:, None, :]
+    return out, (new_conv, ssm_new.astype(cdt))

@@ -1,0 +1,278 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+The xlstm-125m architecture alternates mLSTM blocks (parallelizable via
+the chunkwise scan in kernels/mlstm_scan) with sLSTM blocks (sequential
+recurrence with block-diagonal per-head recurrent weights; inherently
+serial — we scan over time). d_ff=0 in the assigned config means there is
+no separate FFN sub-block: the mLSTM block carries an internal 2x
+up-projection and the sLSTM block a gated (4/3x) post-FFN, as in the
+paper.
+
+Decode state:
+  mLSTM: (C (B,H,dk,dv), n (B,H,dk), m (B,H)) + conv tail (B,K-1,d_inner)
+  sLSTM: (c, n, m, h) each (B, d_model) + conv tail (B,K-1,d_model)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.mlstm_scan import ops as mlstm_ops
+from repro.models.blocks import ParallelCtx, _cast, dense_init
+from repro.models.ssm import _causal_conv
+
+
+# --------------------------------------------------------------------------
+# mLSTM block
+# --------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    h = cfg.xlstm.num_heads
+    dk = d_inner // h
+    return d_inner, h, dk
+
+
+def init_mlstm_block(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_inner, h, dk = mlstm_dims(cfg)
+    k = cfg.xlstm.conv_kernel
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], (d, d_inner), dt),
+        "w_u": dense_init(ks[1], (d, d_inner), dt),
+        "conv_w": (jax.random.normal(ks[2], (k, d_inner), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "w_q": dense_init(ks[3], (d_inner, d_inner), dt),
+        "w_k": dense_init(ks[4], (d_inner, d_inner), dt),
+        "w_v": dense_init(ks[5], (d_inner, d_inner), dt),
+        "w_if": dense_init(ks[6], (d_inner, 2 * h), dt),
+        "b_if": jnp.concatenate([jnp.zeros((h,), jnp.float32),
+                                 jnp.linspace(3.0, 6.0, h)]).astype(dt),
+        "skip": jnp.ones((d_inner,), dt),
+        "out_norm": jnp.ones((d_inner,), dt),
+        "w_down": dense_init(ks[7], (d_inner, d), dt, fan_in=d_inner),
+    }
+
+
+def _headwise_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray,
+                      eps: float = 1e-5) -> jnp.ndarray:
+    """x (B, S, H, dv); scale (H*dv,). Per-head normalization."""
+    b, s, h, dv = x.shape
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf.reshape(b, s, h * dv) *
+            scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_block(params, x: jnp.ndarray, cfg: ModelConfig, ctx: ParallelCtx,
+                initial_state=None, return_state: bool = False):
+    """x (B, S, d) -> y (B, S, d) [, state]. Residual added by caller."""
+    b, s, _ = x.shape
+    d_inner, h, dk = mlstm_dims(cfg)
+    cdt = cfg.compute_dtype
+
+    z = x @ _cast(params["w_z"], cdt)
+    u = x @ _cast(params["w_u"], cdt)
+    conv_init = initial_state[0] if initial_state is not None else None
+    c, conv_tail = _causal_conv(u, params["conv_w"], params["conv_b"],
+                                conv_init)
+    c = jax.nn.silu(c)
+    q = (c @ _cast(params["w_q"], cdt)).reshape(b, s, h, dk)
+    k = (c @ _cast(params["w_k"], cdt)).reshape(b, s, h, dk)
+    v = (u @ _cast(params["w_v"], cdt)).reshape(b, s, h, dk)
+    gates = c @ _cast(params["w_if"], cdt) + \
+        params["b_if"].astype(cdt)[None, None, :]
+    i_pre, f_pre = gates[..., :h], gates[..., h:]
+    ssm_init = initial_state[1] if initial_state is not None else None
+    hseq, final = mlstm_ops.mlstm_scan(
+        q, k, v, i_pre.astype(jnp.float32), f_pre.astype(jnp.float32),
+        initial_state=ssm_init, impl="reference")
+    hn = _headwise_rmsnorm(hseq, params["out_norm"])
+    hn = hn + params["skip"].astype(cdt)[None, None, :] * c
+    hn = hn * jax.nn.silu(z)
+    out = hn @ _cast(params["w_down"], cdt)
+    if return_state:
+        return out, (conv_tail, final)
+    return out
+
+
+def mlstm_block_decode(params, x: jnp.ndarray, cfg: ModelConfig,
+                       ctx: ParallelCtx, state):
+    """One-token decode. x (B, 1, d); state (conv_tail, (C, n, m))."""
+    b = x.shape[0]
+    d_inner, h, dk = mlstm_dims(cfg)
+    cdt = cfg.compute_dtype
+    conv_state, (C, n, m) = state
+
+    z = (x[:, 0] @ _cast(params["w_z"], cdt))
+    u = (x[:, 0] @ _cast(params["w_u"], cdt))
+    window = jnp.concatenate([conv_state, u[:, None, :]], axis=1)
+    new_conv = window[:, 1:, :]
+    w = params["conv_w"].astype(jnp.float32)
+    c = jnp.sum(window.astype(jnp.float32) * w[None], axis=1) + \
+        params["conv_b"].astype(jnp.float32)
+    c = jax.nn.silu(c).astype(cdt)
+    q = (c @ _cast(params["w_q"], cdt)).reshape(b, h, dk)
+    k = (c @ _cast(params["w_k"], cdt)).reshape(b, h, dk)
+    v = (u @ _cast(params["w_v"], cdt)).reshape(b, h, dk)
+    gates = c @ _cast(params["w_if"], cdt) + params["b_if"].astype(cdt)[None]
+    i_pre, f_pre = gates[..., :h], gates[..., h:]
+    hvec, new_state = mlstm_ops.mlstm_decode_step(
+        (C, n, m), q, k, v, i_pre.astype(jnp.float32),
+        f_pre.astype(jnp.float32))
+    hvec = hvec[:, None, :, :]                     # (B, 1, H, dk)
+    hn = _headwise_rmsnorm(hvec.astype(cdt), params["out_norm"])[:, 0]
+    hn = hn + params["skip"].astype(cdt)[None, :] * c
+    hn = hn * jax.nn.silu(z)
+    out = (hn @ _cast(params["w_down"], cdt))[:, None, :]
+    return out, (new_conv, new_state)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d_inner, h, dk = mlstm_dims(cfg)
+    k = cfg.xlstm.conv_kernel
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return (jnp.zeros((batch, k - 1, d_inner), cdt),
+            (jnp.zeros((batch, h, dk, dk), jnp.float32),
+             jnp.zeros((batch, h, dk), jnp.float32),
+             jnp.full((batch, h), -1e30, jnp.float32)))
+
+
+# --------------------------------------------------------------------------
+# sLSTM block
+# --------------------------------------------------------------------------
+
+
+def init_slstm_block(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    h = cfg.xlstm.num_heads
+    dh = d // h
+    k = cfg.xlstm.conv_kernel
+    ff = int(cfg.xlstm.proj_factor_slstm * d)
+    ks = jax.random.split(key, 7)
+    return {
+        "conv_w": (jax.random.normal(ks[0], (k, d), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d,), dt),
+        "w_ifzo": dense_init(ks[1], (d, 4 * d), dt),
+        # block-diagonal per-head recurrent weights (H, dh, 4*dh)
+        "r_ifzo": (jax.random.normal(ks[2], (h, dh, 4 * dh), jnp.float32)
+                   / jnp.sqrt(dh)).astype(dt),
+        "b_ifzo": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.linspace(3.0, 6.0, d),
+             jnp.zeros((2 * d,))]).astype(dt),
+        "out_norm": jnp.ones((d,), dt),
+        "ffn_gate": dense_init(ks[4], (d, ff), dt),
+        "ffn_up": dense_init(ks[5], (d, ff), dt),
+        "ffn_down": dense_init(ks[6], (ff, d), dt, fan_in=ff),
+    }
+
+
+def _slstm_cell(carry, gates_x, r_ifzo, h_heads):
+    """One sLSTM time step. gates_x (B, 4d) pre-activations from input."""
+    c, n, m, hprev = carry                          # each (B, d)
+    b, d = c.shape
+    nh, dh = r_ifzo.shape[0], r_ifzo.shape[1]
+    # recurrent contribution, block-diagonal over heads
+    hh = hprev.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,hdf->bhf", hh, r_ifzo).reshape(b, 4 * d)
+    g = gates_x + rec
+    it, ft, zt, ot = jnp.split(g, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(lf + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(zt)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def _slstm_scan(params, xconv: jnp.ndarray, x_raw: jnp.ndarray,
+                cfg: ModelConfig, initial=None):
+    """xconv/x_raw (B, S, d) -> h (B, S, d), final carry."""
+    b, s, d = xconv.shape
+    h = cfg.xlstm.num_heads
+    # i,f gates see the conv path; z,o the raw path (xLSTM paper)
+    gx = jnp.concatenate([
+        xconv @ _cast(params["w_ifzo"], "float32")[:, :2 * d],
+        x_raw @ _cast(params["w_ifzo"], "float32")[:, 2 * d:]], axis=-1)
+    gx = gx.astype(jnp.float32) + params["b_ifzo"].astype(jnp.float32)
+    r = params["r_ifzo"].astype(jnp.float32)
+    if initial is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        initial = (zeros, zeros, jnp.full((b, d), -1e30, jnp.float32), zeros)
+
+    def step(carry, g_t):
+        return _slstm_cell(carry, g_t, r, h)
+
+    final, hs = jax.lax.scan(step, initial, gx.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), final
+
+
+def slstm_block(params, x: jnp.ndarray, cfg: ModelConfig, ctx: ParallelCtx,
+                initial_state=None, return_state: bool = False):
+    """x (B, S, d) -> y (B, S, d). Residual added by caller."""
+    cdt = cfg.compute_dtype
+    conv_init = initial_state[0] if initial_state is not None else None
+    xc, conv_tail = _causal_conv(x, params["conv_w"], params["conv_b"],
+                                 conv_init)
+    xc = jax.nn.silu(xc)
+    cell_init = initial_state[1] if initial_state is not None else None
+    hs, final = _slstm_scan(params, xc.astype(jnp.float32),
+                            x.astype(jnp.float32), cfg, cell_init)
+    hf = hs.astype(jnp.float32)
+    hf = hf * jax.lax.rsqrt(jnp.mean(hf * hf, axis=-1, keepdims=True) + 1e-5)
+    hn = (hf * params["out_norm"].astype(jnp.float32)).astype(cdt)
+    # gated FFN (proj factor 4/3)
+    g = hn @ _cast(params["ffn_gate"], cdt)
+    u = hn @ _cast(params["ffn_up"], cdt)
+    out = (jax.nn.silu(g) * u) @ _cast(params["ffn_down"], cdt)
+    if return_state:
+        return out, (conv_tail, final)
+    return out
+
+
+def slstm_block_decode(params, x: jnp.ndarray, cfg: ModelConfig,
+                       ctx: ParallelCtx, state):
+    """One-token decode. state (conv_tail, (c, n, m, h))."""
+    b = x.shape[0]
+    d = cfg.d_model
+    cdt = cfg.compute_dtype
+    conv_state, cell = state
+    window = jnp.concatenate([conv_state, x], axis=1)
+    new_conv = window[:, 1:, :]
+    w = params["conv_w"].astype(jnp.float32)
+    xc = jnp.sum(window.astype(jnp.float32) * w[None], axis=1) + \
+        params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)
+    xr = x[:, 0].astype(jnp.float32)
+    wz = params["w_ifzo"].astype(jnp.float32)
+    gx = jnp.concatenate([xc @ wz[:, :2 * d], xr @ wz[:, 2 * d:]], axis=-1)
+    gx = gx + params["b_ifzo"].astype(jnp.float32)
+    new_cell, h_new = _slstm_cell(cell, gx, params["r_ifzo"].astype(
+        jnp.float32), cfg.xlstm.num_heads)
+    hf = h_new * jax.lax.rsqrt(
+        jnp.mean(h_new * h_new, axis=-1, keepdims=True) + 1e-5)
+    hn = (hf * params["out_norm"].astype(jnp.float32)).astype(cdt)
+    g = hn @ _cast(params["ffn_gate"], cdt)
+    u = hn @ _cast(params["ffn_up"], cdt)
+    out = ((jax.nn.silu(g) * u) @ _cast(params["ffn_down"], cdt))[:, None, :]
+    return out, (new_conv, new_cell)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    k = cfg.xlstm.conv_kernel
+    cdt = jnp.dtype(cfg.compute_dtype)
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return (jnp.zeros((batch, k - 1, d), cdt),
+            (zeros, zeros, jnp.full((batch, d), -1e30, jnp.float32), zeros))

@@ -1,0 +1,81 @@
+"""Adam / AdamW as pure pytree transforms (paper: per-GPU optimizer).
+
+Each replica holds (conceptually) its own optimizer initialized with the
+same state — in SPMD that is one optimizer whose states are sharded like
+the parameters (ZeRO-1 when params are FSDP-sharded). Moment dtypes are
+configurable per architecture (``m_dtype``/``v_dtype``): arctic-480b
+stores m in bf16 so the optimizer state fits 16 GB HBM per chip.
+
+All math accumulates in fp32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray              # () int32
+    m: Any                         # pytree like params
+    v: Any
+
+
+def init_state(params: Any, cfg: OptimizerConfig) -> AdamState:
+    m = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.m_dtype)), params)
+    v = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.v_dtype)), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_update(params: Any, grads: Any, state: AdamState,
+                 cfg: OptimizerConfig, lr: jnp.ndarray
+                 ) -> Tuple[Any, AdamState, Dict[str, jnp.ndarray]]:
+    """One AdamW step. Returns (params', state', metrics)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    b1, b2 = cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1.0 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1.0 - b2)
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:    # decay matrices only
+            update = update + cfg.weight_decay * pf
+        pf = pf - lr * update
+        return (pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,69 @@
+"""LAMB — layerwise adaptive large-batch optimization (You et al. 2019).
+
+The HetSeq paper's stated future work: "adapting ongoing research in
+distributed optimization (You et al. 2019) to further improve training
+performance on heterogeneous infrastructure." Heterogeneous capacity
+planning grows the *global* batch with the fleet (every extra node adds
+rows), which is exactly the regime where Adam's fixed learning rate
+breaks and LAMB's per-layer trust ratio
+
+    p <- p - lr * phi(||p||) / ||update|| * update,
+    update = m_hat / (sqrt(v_hat) + eps) + wd * p
+
+keeps training stable. Shares Adam's moment state (and dtype policy /
+ZeRO-1 sharding); selectable via OptimizerConfig(name="lamb") everywhere
+Adam is.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import adam
+
+
+def apply_update(params: Any, grads: Any, state: adam.AdamState,
+                 cfg: OptimizerConfig, lr: jnp.ndarray
+                 ) -> Tuple[Any, adam.AdamState, Dict[str, jnp.ndarray]]:
+    """One LAMB step (state-compatible with adam.AdamState)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = adam.clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = adam.global_norm(grads)
+    step = state.step + 1
+    b1, b2 = cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1.0 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1.0 - b2)
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            update = update + cfg.weight_decay * pf
+        # layerwise trust ratio: phi(||p||)/||u||, 1.0 when degenerate
+        p_norm = jnp.linalg.norm(pf)
+        u_norm = jnp.linalg.norm(update)
+        trust = jnp.where((p_norm > 0) & (u_norm > 0),
+                          p_norm / u_norm, 1.0)
+        pf = pf - lr * trust * update
+        return (pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype),
+                trust)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    mean_trust = jnp.mean(jnp.stack([o[3] for o in out]))
+    metrics = {"grad_norm": gnorm, "lr": lr, "trust_ratio": mean_trust}
+    return new_p, adam.AdamState(step=step, m=new_m, v=new_v), metrics

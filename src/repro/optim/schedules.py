@@ -1,0 +1,34 @@
+"""Learning-rate schedules (paper: per-GPU scheduler, identical states).
+
+inverse_sqrt — the paper's transformer/translation schedule;
+linear       — the paper's BERT schedule (warmup then linear decay);
+cosine, constant — common extras.
+All are pure functions of the (global) step, so every replica computes
+the same lr without communication.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def learning_rate(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    warm = jnp.maximum(float(cfg.warmup_steps), 1.0)
+    total = jnp.maximum(float(cfg.total_steps), warm + 1.0)
+    if cfg.schedule == "inverse_sqrt":
+        # fairseq inverse_sqrt: linear warmup, then lr * sqrt(warm / s)
+        lr = cfg.lr * jnp.minimum(s / warm, jnp.sqrt(warm / s))
+    elif cfg.schedule == "linear":
+        decay = jnp.clip((total - s) / (total - warm), 0.0, 1.0)
+        lr = cfg.lr * jnp.minimum(s / warm, decay)
+    elif cfg.schedule == "cosine":
+        frac = jnp.clip((s - warm) / (total - warm), 0.0, 1.0)
+        lr = cfg.lr * jnp.minimum(s / warm,
+                                  0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+    elif cfg.schedule == "constant":
+        lr = cfg.lr * jnp.minimum(s / warm, 1.0)
+    else:
+        raise ValueError(cfg.schedule)
+    return lr

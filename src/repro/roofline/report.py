@@ -1,0 +1,118 @@
+"""Three-term roofline report from dry-run artifacts (TPU v5e target).
+
+Per (arch, shape, mesh) cell:
+
+    compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes / (chips * HBM_BW)
+    collective term = ici_bytes / ICI_BW + dcn_bytes / DCN_BW
+                      (per-device wire bytes from roofline/hlo.py)
+
+The dominant term is the bottleneck the perf loop iterates on;
+MODEL_FLOPS/HLO_FLOPs shows how much compiled compute is useful
+(catches remat recompute and dispatch waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12            # bf16
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9 * 4              # ~50 GB/s/link, 4 links usable per chip (2D)
+DCN_BW = 25e9                  # cross-pod per-chip share (assumed, DCN)
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float               # whole-program FLOPs (all chips)
+    hlo_bytes: float               # whole-program HBM traffic
+    ici_bytes: float               # per-device wire bytes
+    dcn_bytes: float
+    model_flops: float             # 6*N*D (dense) / 6*N_active*D (MoE)
+    kind: str = "train"
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.ici_bytes / ICI_BW + self.dcn_bytes / DCN_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_bound(self) -> float:
+        """Lower bound on step time: max of the three terms (overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Useful-model-FLOPs utilization at the bound: the score."""
+        if self.step_time_bound <= 0:
+            return 0.0
+        return (self.model_flops / (self.chips * PEAK_FLOPS)
+                ) / self.step_time_bound
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "kind": self.kind,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "ici_bytes": self.ici_bytes, "dcn_bytes": self.dcn_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def model_flops_for(arch_params_active: int, tokens: int,
+                    kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference (fwd only)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * arch_params_active * tokens
+
+
+def format_table(rows, hillclimbed=()) -> str:
+    hdr = (f"| {'arch':22s} | {'shape':12s} | {'mesh':6s} | "
+           f"{'t_comp(s)':>10s} | {'t_mem(s)':>10s} | {'t_coll(s)':>10s} | "
+           f"{'dominant':>10s} | {'useful':>7s} | {'roofl%':>7s} |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    out = [hdr, sep]
+    for r in rows:
+        mark = " *" if (r.arch, r.shape) in hillclimbed else ""
+        out.append(
+            f"| {r.arch + mark:22s} | {r.shape:12s} | {r.mesh:6s} | "
+            f"{r.t_compute:10.4f} | {r.t_memory:10.4f} | "
+            f"{r.t_collective:10.4f} | {r.dominant:>10s} | "
+            f"{r.useful_flops_frac:7.2f} | {100 * r.roofline_frac:6.1f}% |")
+    return "\n".join(out)
+
+
+def load_rows(path: str):
+    with open(path) as fh:
+        data = json.load(fh)
+    return [RooflineRow(**{k: v for k, v in row.items()
+                           if k in RooflineRow.__dataclass_fields__})
+            for row in data]

@@ -1,0 +1,274 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes, plus custom-VJP gradient checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cross_entropy import ref as ce_ref
+from repro.kernels.cross_entropy.cross_entropy import cross_entropy_pallas
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas)
+from repro.kernels.mlstm_scan import ref as ml_ref
+from repro.kernels.mlstm_scan.mlstm_scan import mlstm_scan_pallas
+from repro.kernels.quantize import ref as q_ref
+from repro.kernels.quantize.quantize import quantize_int8_pallas
+from repro.kernels.ssd_scan import ref as ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,sq,skv,h,hkv,d,causal,off", [
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 200, 200, 4, 4, 64, True, 0),       # non-multiple of block
+    (2, 1, 256, 8, 2, 128, True, 255),      # decode-style single query
+    (1, 64, 320, 4, 1, 32, False, 0),       # MQA, non-causal
+    (1, 96, 96, 6, 3, 16, True, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_pallas_vs_dense(b, sq, skv, h, hkv, d, causal,
+                                         off, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), dtype)
+    out_p = flash_attention_pallas(q, k, v, causal=causal, q_offset=off,
+                                   interpret=True)
+    out_r = fa_ref.mha_dense(q, k, v, causal=causal, q_offset=off)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_p, np.float32),
+                               np.asarray(out_r, np.float32), atol=tol)
+
+
+def test_flash_chunked_matches_dense_with_kv_len():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 8, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 4, 32))
+    v = jax.random.normal(ks[2], (2, 64, 4, 32))
+    kv_len = jnp.array([17, 40], jnp.int32)
+    out_c = fa_ref.mha_chunked(q, k, v, causal=False, kv_len=kv_len,
+                               chunk_size=16)
+    out_d = fa_ref.mha_dense(q, k, v, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_d),
+                               atol=2e-5)
+
+
+def test_flash_custom_vjp_matches_dense_grad():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 48, 4, 16))
+    k = jax.random.normal(ks[1], (2, 48, 2, 16))
+    v = jax.random.normal(ks[2], (2, 48, 2, 16))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(fa_ref.mha_dense(q, k, v)))
+
+    def f_new(q, k, v):
+        return jnp.sum(jnp.sin(fa_ref.mha_chunked(q, k, v, chunk_size=16)))
+
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g_new = jax.grad(f_new, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_new):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# cross entropy
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,d,v,ls,cap", [
+    (64, 32, 100, 0.0, 0.0),
+    (300, 64, 1500, 0.1, 0.0),
+    (128, 48, 2048, 0.0, 30.0),
+    (17, 16, 130, 0.1, 0.0),                # odd sizes
+])
+def test_ce_pallas_vs_dense(t, d, v, ls, cap):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    h = jax.random.normal(ks[0], (t, d))
+    w = jax.random.normal(ks[1], (d, v)) * 0.1
+    lab = jax.random.randint(ks[2], (t,), 0, v)
+    wt = (jax.random.uniform(ks[3], (t,)) > 0.2).astype(jnp.float32)
+    lp, wp = cross_entropy_pallas(h, w, lab, wt, label_smoothing=ls,
+                                  logit_softcap=cap, interpret=True)
+    lr, wr = ce_ref.ce_dense(h, w, lab, wt, label_smoothing=ls,
+                             logit_softcap=cap)
+    assert abs(float(lp) - float(lr)) / max(abs(float(lr)), 1.0) < 1e-5
+    assert abs(float(wp) - float(wr)) < 1e-5
+
+
+def test_ce_chunked_vjp_matches_dense_grad():
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    h = jax.random.normal(ks[0], (100, 16))
+    w = jax.random.normal(ks[1], (16, 512)) * 0.1
+    lab = jax.random.randint(ks[2], (100,), 0, 512)
+    wt = (jax.random.uniform(ks[3], (100,)) > 0.3).astype(jnp.float32)
+
+    def f(fn):
+        def inner(h, w):
+            l, ws = fn(h, w, lab, wt, label_smoothing=0.1)
+            return l / ws
+        return inner
+
+    g_ref = jax.grad(f(ce_ref.ce_dense), argnums=(0, 1))(h, w)
+    g_new = jax.grad(
+        f(lambda *a, **k: ce_ref.ce_chunked(*a, chunk_size=32, **k)),
+        argnums=(0, 1))(h, w)
+    for a, b in zip(g_ref, g_new):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_ce_dummy_tokens_do_not_contribute():
+    """Weight-0 (dummy) tokens must not change loss or gradient (M3)."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    h = jax.random.normal(ks[0], (20, 8))
+    w = jax.random.normal(ks[1], (8, 64)) * 0.1
+    lab = jax.random.randint(ks[2], (20,), 0, 64)
+    wt_full = jnp.ones((20,)).at[10:].set(0.0)
+    l1, s1 = ce_ref.ce_chunked(h, w, lab, wt_full, chunk_size=8)
+    l2, s2 = ce_ref.ce_chunked(h[:10], w, lab[:10], jnp.ones((10,)),
+                               chunk_size=8)
+    assert abs(float(l1) - float(l2)) < 1e-4
+    assert float(s1) == float(s2) == 10.0
+
+
+# --------------------------------------------------------------------------
+# SSD scan (Mamba2)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 256, 8, 32, 2, 64, 128),
+    (1, 100, 4, 16, 1, 32, 64),             # padding path
+    (2, 64, 6, 8, 3, 16, 32),               # groups
+])
+def test_ssd_pallas_vs_sequential(b, s, h, p, g, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+    Cm = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+    D = jax.random.normal(ks[5], (h,))
+    yp, fp = ssd_scan_pallas(x, dt, A, Bm, Cm, D, chunk_size=chunk,
+                             interpret=True)
+    yr, fr = ssd_ref.ssd_sequential(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(fp), np.asarray(fr), atol=2e-3)
+
+
+def test_ssd_chunked_matches_sequential_and_decode():
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    b, s, h, p, n = 1, 33, 2, 8, 16
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, 1, n)) * 0.3
+    Cm = jax.random.normal(ks[4], (b, s, 1, n)) * 0.3
+    y_c, f_c = ssd_ref.ssd_chunked(x, dt, A, Bm, Cm, chunk_size=16)
+    y_s, f_s = ssd_ref.ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s), atol=1e-4)
+    # step-by-step decode equals the scan
+    state = jnp.zeros((b, h, p, n))
+    for t in range(s):
+        yt, state = ssd_ref.ssd_decode_step(
+            state, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        np.testing.assert_allclose(np.asarray(yt), np.asarray(y_s[:, t]),
+                                   atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# mLSTM scan
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,dk,dv,chunk", [
+    (2, 128, 4, 32, 32, 64),
+    (1, 100, 2, 16, 24, 32),
+    (2, 64, 3, 8, 8, 16),
+])
+def test_mlstm_pallas_vs_sequential(b, s, h, dk, dv, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    q = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    ip = jax.random.normal(ks[3], (b, s, h)) * 2
+    fp_ = jax.random.normal(ks[4], (b, s, h)) * 2 + 2
+    yp, _ = mlstm_scan_pallas(q, k, v, ip, fp_, chunk_size=chunk,
+                              interpret=True)
+    yr, _ = ml_ref.mlstm_sequential(q, k, v, ip, fp_)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr), atol=2e-3)
+
+
+def test_mlstm_decode_step_matches_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    b, s, h, dk = 2, 17, 2, 8
+    q = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dk))
+    ip = jax.random.normal(ks[3], (b, s, h))
+    fp_ = jax.random.normal(ks[4], (b, s, h)) + 2
+    y_ref, _ = ml_ref.mlstm_sequential(q, k, v, ip, fp_)
+    state = (jnp.zeros((b, h, dk, dk)), jnp.zeros((b, h, dk)),
+             jnp.full((b, h), -1e30))
+    for t in range(s):
+        yt, state = ml_ref.mlstm_decode_step(
+            state, q[:, t], k[:, t], v[:, t], ip[:, t], fp_[:, t])
+        np.testing.assert_allclose(np.asarray(yt), np.asarray(y_ref[:, t]),
+                                   atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# quantize
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape,bs", [((1000,), 256), ((64, 70), 128),
+                                      ((3, 5, 7), 64)])
+def test_quantize_pallas_vs_ref(shape, bs):
+    x = jax.random.normal(jax.random.PRNGKey(10), shape) * 3
+    qp, sp = quantize_int8_pallas(x, block_size=bs, interpret=True)
+    qr, sr = q_ref.quantize_int8(x, block_size=bs)
+    assert np.array_equal(np.asarray(qp), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr), rtol=1e-6)
+    xd = q_ref.dequantize_int8(qp, sp, shape, bs)
+    assert float(jnp.max(jnp.abs(xd - x))) < 3 * float(jnp.max(sp))
+
+
+def test_quantize_stochastic_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(11), (200000,))
+    q, s = q_ref.quantize_int8(x, block_size=256,
+                               key=jax.random.PRNGKey(12))
+    xd = q_ref.dequantize_int8(q, s, x.shape, 256)
+    assert abs(float(jnp.mean(xd - x))) < 1e-4
+
+
+# --------------------------------------------------------------------------
+# MLA flash decode
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,r,dr,s,chunk", [
+    (2, 8, 64, 16, 256, 64),
+    (1, 4, 32, 8, 100, 32),                 # non-multiple of chunk
+    (2, 16, 128, 32, 512, 128),
+])
+def test_mla_decode_pallas_vs_dense(b, h, r, dr, s, chunk):
+    from repro.kernels.mla_decode import ref as md_ref
+    from repro.kernels.mla_decode.mla_decode import mla_decode_pallas
+    ks = jax.random.split(jax.random.PRNGKey(20), 5)
+    q_abs = jax.random.normal(ks[0], (b, h, r)) * 0.3
+    q_r = jax.random.normal(ks[1], (b, h, dr)) * 0.3
+    ckv = jax.random.normal(ks[2], (b, s, r)) * 0.3
+    kr = jax.random.normal(ks[3], (b, s, dr)) * 0.3
+    kv_len = jax.random.randint(ks[4], (b,), s // 2, s + 1)
+    scale = (r + dr) ** -0.5
+    out_p = mla_decode_pallas(q_abs, q_r, ckv, kr, kv_len, scale,
+                              chunk=chunk, interpret=True)
+    out_r = md_ref.mla_decode_dense(q_abs, q_r, ckv, kr, kv_len, scale)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               atol=2e-5)

@@ -1,0 +1,103 @@
+"""Roofline HLO analyzer: trip-count weighting, collective accounting."""
+import textwrap
+
+import pytest
+
+from repro.roofline import hlo as H
+from repro.roofline.report import RooflineRow
+
+SYNTH = textwrap.dedent("""\
+    HloModule jit_step, is_scheduled=true
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups={{0,1,2,3}}, to_apply=%add
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i2, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,16])) -> pred[] {
+      %p = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (arg: f32[8,16]) -> (s32[], f32[8,16]) {
+      %arg = f32[8,16]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %arg)
+      %w2 = f32[16,4]{1,0} constant({...})
+      %dot.2 = f32[8,4]{1,0} dot(%arg, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ag = f32[32,4]{1,0} all-gather(%dot.2), channel_id=2, replica_groups=[256,2]<=[2,256]T(1,0), dimensions={0}
+      ROOT %wh = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%while_body_alias
+    }
+    """).replace("%while_body_alias", "%body")
+
+
+def test_split_computations():
+    comps = H._split_computations(SYNTH)
+    assert set(comps) == {"body", "cond", "add", "main"}
+    assert any("dot.1" in l for l in comps["body"])
+
+
+def test_trip_count_weighting():
+    comps = H._split_computations(SYNTH)
+    weights, _ = H._call_weights(SYNTH, comps)
+    assert weights["main"] == 1.0
+    assert weights["body"] == 5.0          # constant(5) in the condition
+
+
+def test_dot_flops_with_trip_counts():
+    pc = H.program_costs(SYNTH)
+    # dot.1: 2*8*16*16 = 4096 flops x 5 trips; dot.2: 2*8*4*16 = 1024
+    assert pc.flops == 5 * 4096 + 1024
+    assert pc.dot_count == 2
+
+
+def test_collective_stats_and_pod_classification():
+    cs = H.collective_stats(SYNTH, pod_size=256)
+    # all-reduce in the loop: result 8*16*4B=512B; n=4 -> wire 2*512*3/4
+    ar_once = 2 * 512 * 3 // 4
+    assert cs.bytes_by_type["all-reduce"] == 5 * ar_once
+    # all-gather groups of 256 devices spanning 512 => cross-pod (DCN)
+    assert cs.dcn_bytes > 0
+    assert cs.ici_bytes == 5 * ar_once
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[8,16]") == 512
+    assert H._shape_bytes("bf16[2,3] whatever pred[7]") == 12 + 7
+    assert H._shape_bytes("(f32[4], s32[2])") == 16 + 8
+
+
+def test_roofline_row_terms():
+    r = RooflineRow(arch="x", shape="train_4k", mesh="single", chips=256,
+                    hlo_flops=197e12 * 256, hlo_bytes=819e9 * 256,
+                    ici_bytes=200e9, dcn_bytes=0.0,
+                    model_flops=0.75 * 197e12 * 256)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == pytest.approx(1.0)
+    assert r.useful_flops_frac == pytest.approx(0.75)
+    assert r.roofline_frac == pytest.approx(0.75)
+    assert r.dominant in ("compute", "memory", "collective")
+
+
+def test_roofline_dominant_term():
+    r = RooflineRow(arch="x", shape="s", mesh="single", chips=1,
+                    hlo_flops=1e12, hlo_bytes=1e12, ici_bytes=0,
+                    dcn_bytes=0, model_flops=1e12)
+    # 1e12 bytes / 819e9 = 1.22 s >> 1e12/197e12 flops
+    assert r.dominant == "memory"
