@@ -14,6 +14,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 
 from repro.configs import base as cfgbase
@@ -81,7 +83,7 @@ def run_training(
                           seed=seed)
     rng = np.random.default_rng(seed)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = steps_mod.init_train_state(model, tcfg, mesh,
                                            jax.random.PRNGKey(seed))
         step_fn = steps_mod.build_train_step(model, tcfg, mesh)

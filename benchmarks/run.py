@@ -13,6 +13,9 @@ DOC = """Benchmark suite — one entry per paper table/figure + roofline.
   scaling_small        paper Table 3, MNIST block (negative result)
   equivalence          the HetSeq invariant, measured
   roofline_bench       §Roofline table from dry-run artifacts
+  reduce_bench         per-leaf vs bucketed gradient reduction (--quick
+                       smoke: fails loudly if the bucketed engine's
+                       cross-pod collective count regresses)
 
 Prints a ``name,us_per_call,derived`` CSV summary at the end.
 """
@@ -25,8 +28,14 @@ def main() -> None:
     t_all = time.time()
     csv = []
 
-    from benchmarks import (equivalence, roofline_bench, scaling_bert,
-                            scaling_small, scaling_translation)
+    from benchmarks import (equivalence, reduce_bench, roofline_bench,
+                            scaling_bert, scaling_small,
+                            scaling_translation)
+
+    rb = reduce_bench.main(quick=True)
+    csv.append(("reduce_bench", rb["bucketed"]["avg_ms"] * 1e3,
+                f"collectives_bucketed={rb['bucketed']['collectives']} "
+                f"vs_per_leaf={rb['per_leaf']['collectives']}"))
 
     t0 = time.time()
     res = scaling_translation.main(max_nodes=8, steps=10)

@@ -205,16 +205,34 @@ class HetConfig:
     ``capacities`` assigns a relative throughput/memory capacity to each DP
     rank (pod x data position). The capacity planner converts these into
     per-rank real-row counts; remaining buffer rows are dummy rows with
-    weight 0 (paper: empty/partial batch handling). ``grad_reduction``
-    selects the paper-faithful all-reduce vs the beyond-paper hierarchical
-    compressed schedule.
+    weight 0 (paper: empty/partial batch handling).
+
+    ``grad_reduction`` selects the reduction schedule:
+      * "allreduce"          — paper-faithful XLA-automatic reduction;
+      * "bucketed_allreduce" — explicit flat-buffer reduction over the
+        DP axes: grads packed into fixed-size f32 buckets
+        (core/buckets.py), one psum_scatter + one all_gather for the
+        whole tree. Requires ``bucket_mb > 0``;
+      * "hierarchical"       — in-pod automatic (ICI), cross-pod (DCN)
+        explicit, optionally int8-compressed with error feedback.
+
+    ``bucket_mb`` (PyTorch-DDP-style) is the bucket payload in MiB of
+    f32 for the bucketed engine. 0 keeps the legacy per-leaf walk on
+    the hierarchical path (one collective per pytree leaf) — measured
+    against the bucketed engine by benchmarks/reduce_bench.py.
+    ``quantize_impl`` picks the int8 kernels for the compressed
+    exchange: "reference" (pure jnp, portable) or "pallas" (fused TPU
+    kernels: one quantize launch per step over the concatenated bucket
+    stack plus the fused dequant-accumulate receive kernel).
     """
 
     capacities: Tuple[float, ...] = ()      # empty => homogeneous
     weighting: str = "tokens"               # tokens | samples
-    grad_reduction: str = "allreduce"       # allreduce | hierarchical
+    grad_reduction: str = "allreduce"       # allreduce | bucketed_allreduce | hierarchical
     compression: str = "none"               # none | int8 | bf16
     error_feedback: bool = True
+    bucket_mb: float = 0.0                  # >0 => bucketed flat-buffer engine
+    quantize_impl: str = "reference"        # reference | pallas
     accum_steps: int = 1                    # delayed update (paper M4)
     straggler_ema: float = 0.9
     replan_interval: int = 100              # steps between capacity replans

@@ -16,10 +16,45 @@ capacity mix. This is the scan implemented here.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def scan_accumulate(
+    grad_fn: Callable[[Any, Dict], Tuple[Tuple[jnp.ndarray, jnp.ndarray],
+                                         Any]],
+    params: Any,
+    microbatches: Dict[str, jnp.ndarray],
+    carry_dtype: Optional[Callable[[Any], Any]] = None,
+) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
+    """The shared accumulation scan core: UNSCALED sums.
+
+    ``grad_fn(params, mb) -> ((obj_sum, weight_sum), grads)`` — i.e. a
+    ``jax.value_and_grad(..., has_aux=True)`` of a (objective-sum,
+    weight-sum) objective. Scans it over stacked microbatches and
+    returns ``(grad_of_sums, obj_sum, weight_sum)`` WITHOUT the final
+    division — the weighting math (divide by summed weight exactly
+    once) lives in the callers: :func:`accumulate_grads` for the local
+    path, launch/steps.py for the sharded train step (which divides
+    after the cross-rank psum).
+
+    ``carry_dtype``: per-leaf accumulator dtype policy (default fp32).
+    """
+    dtype_of = carry_dtype or (lambda p: jnp.float32)
+
+    def body(carry, mb):
+        g_acc, o_acc, w_acc = carry
+        (o, w), g = grad_fn(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+        return (g_acc, o_acc + o, w_acc + w), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype_of(p)), params)
+    (g_sum, o_sum, w_sum), _ = jax.lax.scan(
+        body, (zeros, jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), microbatches)
+    return g_sum, o_sum, w_sum
 
 
 def accumulate_grads(
@@ -39,17 +74,7 @@ def accumulate_grads(
         return o, w
 
     grad_fn = jax.value_and_grad(obj, has_aux=True)
-
-    def body(carry, mb):
-        g_acc, o_acc, w_acc = carry
-        (o, w), g = grad_fn(params, mb)
-        g_acc = jax.tree.map(jnp.add, g_acc, g)
-        return (g_acc, o_acc + o, w_acc + w), None
-
-    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    (g_sum, o_sum, w_sum), _ = jax.lax.scan(
-        body, (zeros, jnp.zeros((), jnp.float32),
-               jnp.zeros((), jnp.float32)), microbatches)
+    g_sum, o_sum, w_sum = scan_accumulate(grad_fn, params, microbatches)
     w_safe = jnp.maximum(w_sum, 1e-9)
     grads = jax.tree.map(lambda g: (g / w_safe).astype(jnp.float32), g_sum)
     return grads, o_sum / w_safe, w_sum

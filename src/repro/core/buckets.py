@@ -1,0 +1,312 @@
+"""Bucketed flat-buffer gradient reduction (the hot-path engine).
+
+HetSeq's contribution is *exact* heterogeneous data parallelism, which
+makes gradient synchronization the dominant cross-node cost. The legacy
+reduction paths walked the gradient pytree leaf by leaf — dozens of
+small, latency-bound DCN collectives per step, each quantized with its
+own kernel launch, and the compressed path rebuilt the sum by gathering
+ALL pods' full payloads (O(pods) receive bandwidth).
+
+This module replaces that with PyTorch-DDP-style fixed-size buckets:
+
+  * ``build_layout`` assigns every leaf a contiguous range of one
+    conceptual fp32 stream, padded so it divides into ``num_buckets``
+    buckets of exactly ``bucket_elems`` elements (leaves may span
+    bucket boundaries — the bucket grid is fixed-size by construction,
+    so the cross-link collective count is ``ceil(total_bytes /
+    bucket_bytes)``-bounded regardless of how many leaves there are).
+  * ``pack_buckets`` / ``unpack_buckets`` move a pytree into / out of
+    the (num_buckets, bucket_elems) f32 bucket stack, preserving leaf
+    dtypes. The error-feedback state lives in the SAME flat layout
+    (one f32 array, not a pytree mirror).
+  * ``exchange_buckets`` is the reduction schedule, applied to the
+    whole bucket stack at once:
+
+      uncompressed:  psum_scatter  ->  all_gather
+      int8:          quantize(one fused kernel over ALL buckets)
+                     -> all_to_all of fused int8 payload (values +
+                        bit-cast scales, ONE collective)
+                     -> fused dequant-accumulate kernel (receive side)
+                     -> re-quantize shard sum -> all_gather payload
+
+    Both variants issue exactly TWO cross-link collectives per step for
+    the entire gradient, and both move ~2x shard bytes per rank on the
+    link (reduce-scatter leg + broadcast leg) instead of O(ranks) full
+    payloads. Error feedback captures both quantization stages: each
+    rank keeps its own send-side residual, and the owner of a shard
+    additionally keeps the residual of the re-quantized sum.
+
+Caveat (documented, not hidden): packing concatenates leaves, so inside
+a partially-manual shard_map region XLA may re-layout (data, model)-
+sharded leaves into the replicated flat buffer. On the multi-pod
+production mesh prefer ``hierarchical_reduce_bucketed``
+(core/hierarchical.py), which reduce-scatters over the in-pod axis
+first so only 1/data_size of the buffer exists per rank when the DCN
+exchange runs.
+
+Config: ``HetConfig.bucket_mb`` (0 = legacy per-leaf paths),
+``HetConfig.quantize_impl`` selects the reference vs Pallas kernels.
+Benchmark: benchmarks/reduce_bench.py emits BENCH_reduce.json with
+collective-launch counts, modeled DCN bytes and measured step times for
+per-leaf vs bucketed on the 8-device host mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import compression
+from repro.kernels.quantize import ops as q_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static assignment of pytree leaves to fixed-size f32 buckets."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]        # leaf start in the flat stream
+    sizes: Tuple[int, ...]          # leaf element counts
+    total: int                      # sum(sizes)
+    bucket_elems: int
+    num_buckets: int
+
+    @property
+    def padded_total(self) -> int:
+        return self.num_buckets * self.bucket_elems
+
+    @property
+    def bucket_bytes(self) -> int:
+        return self.bucket_elems * 4
+
+    @property
+    def total_bytes(self) -> int:
+        return self.total * 4
+
+    def error_shape(self, ranks: int) -> Tuple[int, int, int]:
+        """Global shape of the flat error-feedback state: one bucket
+        stack per rank along the reduction axis."""
+        return (ranks, self.num_buckets, self.bucket_elems)
+
+
+def build_layout(tree: Any, *, bucket_mb: float = 4.0,
+                 multiple_of: int = 1) -> BucketLayout:
+    """Compute the bucket grid for a pytree of arrays/ShapeDtypeStructs.
+
+    ``bucket_mb`` is the target bucket payload in MiB of f32
+    (PyTorch-DDP-style knob, ``HetConfig.bucket_mb``). ``bucket_elems``
+    is rounded up to ``multiple_of`` so each bucket divides evenly into
+    per-rank shards and quantization blocks (callers pass
+    ranks * block_size for compressed exchanges).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(int(d) for d in l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(int(math.prod(s)) for s in shapes)
+    offsets = []
+    off = 0
+    for n in sizes:
+        offsets.append(off)
+        off += n
+    total = off
+    if total == 0:
+        raise ValueError("cannot bucket an empty pytree")
+    target = max(1, int(bucket_mb * (1 << 20) / 4))
+    bucket_elems = -(-target // multiple_of) * multiple_of
+    # never more padding than one bucket: shrink to the padded total
+    bucket_elems = min(bucket_elems,
+                       -(-total // multiple_of) * multiple_of)
+    num_buckets = -(-total // bucket_elems)
+    return BucketLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                        offsets=tuple(offsets), sizes=sizes, total=total,
+                        bucket_elems=bucket_elems, num_buckets=num_buckets)
+
+
+def pack_buckets(tree: Any, layout: BucketLayout) -> jnp.ndarray:
+    """Pytree -> (num_buckets, bucket_elems) f32 bucket stack."""
+    leaves = jax.tree.leaves(tree)
+    if len(leaves) != len(layout.sizes):
+        raise ValueError(
+            f"tree has {len(leaves)} leaves, layout expects "
+            f"{len(layout.sizes)}")
+    flat = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves])
+    if flat.shape[0] != layout.total:
+        raise ValueError(
+            f"tree holds {flat.shape[0]} elements, layout expects "
+            f"{layout.total}")
+    flat = compat.pad_trailing(flat, layout.padded_total - layout.total)
+    return flat.reshape(layout.num_buckets, layout.bucket_elems)
+
+
+def unpack_buckets(buckets: jnp.ndarray, layout: BucketLayout) -> Any:
+    """(num_buckets, bucket_elems) -> pytree with original dtypes."""
+    flat = buckets.reshape(-1)
+    leaves = [
+        flat[off:off + n].reshape(shape).astype(dtype)
+        for off, n, shape, dtype in zip(layout.offsets, layout.sizes,
+                                        layout.shapes, layout.dtypes)
+    ]
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def init_error_buckets(layout: BucketLayout) -> jnp.ndarray:
+    """Per-rank flat error-feedback state (one rank's slice)."""
+    return jnp.zeros((layout.num_buckets, layout.bucket_elems),
+                     jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# the exchange schedule
+# --------------------------------------------------------------------------
+
+
+def exchange_buckets(
+    buckets: jnp.ndarray,
+    err: Optional[jnp.ndarray] = None,
+    *,
+    axis: compat.AxisNames,
+    axis_size: int,
+    compress: bool = False,
+    block_size: int = 256,
+    key: Optional[jax.Array] = None,
+    impl: str = "reference",
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Inside shard_map(manual over ``axis``): all-reduce the stack.
+
+    ``buckets``: (num_buckets, bucket_elems) — this rank's gradient
+    contribution, packed. ``err``: same shape, this rank's persistent
+    error-feedback state (compressed mode only). Returns the globally
+    summed stack and the new error state.
+
+    Exactly two collectives cross the link regardless of bucket or leaf
+    count; compressed mode keeps int8 (+bit-cast scales) on the wire in
+    both directions.
+    """
+    nb, be = buckets.shape
+    p = axis_size
+    if be % p:
+        raise ValueError(f"bucket_elems {be} not divisible by axis size "
+                         f"{p}; build the layout with multiple_of={p}")
+    shard = be // p
+    x = buckets.reshape(nb, p, shard)
+
+    if not compress:
+        sh = jax.lax.psum_scatter(x, axis, scatter_dimension=1,
+                                  tiled=False)              # (nb, shard)
+        onehot = (None if compat.NATIVE_MANUAL_COLLECTIVES
+                  else compat.manual_axis_onehot(axis, p, tie=buckets))
+        full = compat.manual_all_gather(sh, axis, p, onehot)
+        return jnp.moveaxis(full, 0, 1).reshape(nb, be), err
+
+    if shard % block_size:
+        raise ValueError(
+            f"shard {shard} not divisible by block_size {block_size}; "
+            f"build the layout with multiple_of={p * block_size}")
+    ns = shard // block_size
+
+    want_err = err is not None
+    corrected = x + (err.reshape(nb, p, shard) if want_err else 0.0)
+    # collective-free on native jax (axis_index); one tiny identity
+    # scatter on the emulated stack
+    onehot = compat.manual_axis_onehot(axis, p, tie=buckets)
+    if key is not None:
+        # decorrelate stochastic rounding across ranks
+        key = jax.random.fold_in(key, jnp.argmax(onehot).astype(jnp.int32))
+
+    # ONE fused quantize over the whole concatenated bucket stack
+    q, s = q_ops.quantize_int8(corrected, block_size=block_size, key=key,
+                               impl=impl, interpret=interpret)
+    # q: (nb*p*ns, block), s: (nb*p*ns,)
+    if want_err:
+        deq_local = (q.astype(jnp.float32) *
+                     s[:, None]).reshape(nb, p, shard)
+        new_err = corrected - deq_local      # stage-1 residual, all shards
+
+    payload = compression.fuse_payload(
+        q.reshape(nb, p, ns, block_size), s.reshape(nb, p, ns))
+    # rank-major leading axis for the exchange: row j = message to rank j
+    wire = jnp.moveaxis(payload, 1, 0)       # (p, nb, ns, block+4)
+    rx = compat.manual_all_to_all(wire, axis, p, onehot)  # row j = from j
+    q_x, s_x = compression.split_payload(rx, block_size)
+
+    # fused dequant-accumulate over the peer axis (receive side)
+    shard_sum = q_ops.dequant_accum(
+        q_x.reshape(p, nb * ns, block_size), s_x.reshape(p, nb * ns),
+        impl=impl, interpret=interpret)      # (nb*ns, block)
+
+    # re-quantize the summed shard for the broadcast leg
+    q2, s2 = q_ops.quantize_int8(shard_sum, block_size=block_size,
+                                 key=None, impl=impl, interpret=interpret)
+    if want_err:
+        deq2 = (q2.astype(jnp.float32) * s2[:, None]).reshape(nb, shard)
+        resid2 = shard_sum.reshape(nb, shard) - deq2
+        # stage-2 residual belongs to this shard's owner (= this rank):
+        # scatter it into our slot of the flat error state
+        new_err = new_err + resid2[:, None, :] * onehot[None, :, None]
+
+    payload2 = compression.fuse_payload(
+        q2.reshape(nb, ns, block_size), s2.reshape(nb, ns))
+    g2 = compat.manual_all_gather(payload2, axis, p, onehot)
+    qg, sg = compression.split_payload(g2, block_size)
+    full = qg.astype(jnp.float32) * sg[..., None]      # (p, nb, ns, B)
+    full = jnp.moveaxis(full, 0, 1).reshape(nb, be)
+    return full, (new_err.reshape(nb, be) if want_err else None)
+
+
+# --------------------------------------------------------------------------
+# analytic link-byte model (for §Roofline and the reduction benchmark)
+# --------------------------------------------------------------------------
+
+
+def modeled_link_bytes(layout: BucketLayout, ranks: int, *,
+                       compress: bool = False,
+                       block_size: int = 256) -> int:
+    """Per-rank bytes on the reduction link for one bucketed exchange.
+
+    Uncompressed: reduce-scatter + all-gather each move (p-1)/p of the
+    padded buffer per rank. Compressed: the all_to_all sends (p-1)/p of
+    the fused int8 payload, the all-gather broadcast leg forwards
+    (p-1) shard payloads. This models the *native* schedule; the
+    psum-based CPU emulation in compat.py moves more bytes but issues
+    the same number of collectives.
+    """
+    p = ranks
+    n = layout.padded_total
+    if not compress:
+        return int(2 * (p - 1) / p * n * 4)
+    blocks = n // block_size
+    payload = n + blocks * 4                   # int8 values + fused scales
+    a2a = (p - 1) / p * payload
+    ag = (p - 1) / p * payload                 # p shard payloads, ring leg
+    return int(a2a + ag)
+
+
+def modeled_per_leaf_bytes(tree: Any, ranks: int, *,
+                           compress: bool = False,
+                           block_size: int = 256) -> int:
+    """Per-rank link bytes for the legacy per-leaf schedule.
+
+    Uncompressed: one psum per leaf (ring all-reduce, ~2(p-1)/p of the
+    leaf). Compressed (legacy _cross_pod_reduce): all-gather of EVERY
+    rank's full quantized payload — (p-1) full payloads per rank, the
+    O(ranks) receive-bandwidth term the bucketed schedule removes.
+    """
+    p = ranks
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(math.prod(leaf.shape)) if leaf.shape else 1
+        if not compress:
+            total += int(2 * (p - 1) / p * n * 4)
+        else:
+            blocks = -(-n // block_size)
+            payload = blocks * block_size + blocks * 4
+            total += int((p - 1) * payload)
+    return total

@@ -4,15 +4,22 @@ Applied ONLY to the cross-pod ("pod" axis / DCN) leg of the gradient
 reduction — the slow, heterogeneous link that is the TPU analogue of the
 paper's campus Ethernet. In-pod (ICI) reductions stay full precision.
 
-Scheme (per leaf, per step):
+Scheme (per leaf or per bucket, per step):
   1. e_corrected = grad + error_state           (error feedback)
   2. q, scales  = blockwise int8 quantize (kernels/quantize)
-  3. exchange q + scales across pods (hierarchical.py does the collective)
+  3. exchange q + scales across pods (hierarchical.py / buckets.py do
+     the collective; the bucketed path fuses scales into the int8 wire
+     payload via ``fuse_payload`` so each exchange is ONE collective)
   4. error_state' = e_corrected - dequant(q)    (what compression lost)
 
 Error feedback makes the compressed reduction converge like the exact
 one (Karimireddy et al. 2019); the quantizer's stochastic rounding keeps
 single-step bias near zero as well.
+
+The per-leaf ``compress_tree``/``decompress_tree`` walk below is the
+legacy path (one quantize + one exchange per pytree leaf); the bucketed
+flat-buffer engine in core/buckets.py quantizes whole bucket stacks in
+a single kernel call and should be preferred on hot paths.
 """
 from __future__ import annotations
 
@@ -65,6 +72,45 @@ def decompress_tree(q_tree: Any, s_tree: Any, shapes: Any,
     return jax.tree.map(
         lambda q, s, ref: q_ref.dequantize_int8(q, s, ref.shape, block_size),
         q_tree, s_tree, shapes)
+
+
+def fuse_payload(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Fuse int8 values + f32 scales into ONE wire buffer per block.
+
+    ``q``: (..., blocks, block_size) int8, ``s``: (..., blocks) f32.
+    On current jax this is an int8 buffer of block_size + 4 bytes per
+    block — the scale bit-cast into 4 trailing bytes — so a compressed
+    exchange is a single collective instead of one for values + one for
+    scales. On old jaxlibs ``bitcast_convert_type`` is broken inside
+    partially-manual regions AND the emulated collectives move f32
+    anyway (compat.py), so the fused buffer is f32 with one trailing
+    scale lane: identical collective structure and numerics, without
+    the bit-packing.
+    """
+    from repro import compat
+
+    if compat.NATIVE_MANUAL_COLLECTIVES:
+        s_bytes = jax.lax.bitcast_convert_type(s, jnp.int8)
+        return jnp.concatenate([q, s_bytes], axis=-1)
+    return jnp.concatenate([q.astype(jnp.float32), s[..., None]], axis=-1)
+
+
+def split_payload(payload: jnp.ndarray, block_size: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inverse of :func:`fuse_payload`: -> (q int8, s f32).
+
+    Dispatches on the payload dtype (int8 = bit-packed, f32 = fused
+    lanes); int8 code values are exact in f32, so the round trip is
+    lossless either way.
+    """
+    if payload.dtype == jnp.int8:
+        q = payload[..., :block_size]
+        s = jax.lax.bitcast_convert_type(payload[..., block_size:],
+                                         jnp.float32)
+        return q, s
+    q = payload[..., :block_size].astype(jnp.int8)
+    s = payload[..., block_size]
+    return q, s
 
 
 def compression_ratio(grads: Any, block_size: int = 256) -> float:

@@ -11,29 +11,42 @@ link. The hierarchical schedule:
   3. in-pod all-gather over "data" to rebuild the full gradient.
 
 Cross-pod bytes drop by data_size (16x) x compression (~3.9x) vs the
-flat reduction. Expressed with jax.shard_map(axis_names={"pod","data"})
+flat reduction. Expressed with shard_map(axis_names={"pod","data"})
 so the "model" axis stays under automatic (pjit) partitioning.
 
-This module provides the *manual-collective* building block; the train
-step (launch/steps.py) wires it behind ``HetConfig.grad_reduction``.
+Two granularities:
+  * ``hierarchical_reduce_leaf`` / ``hierarchical_reduce_tree`` — the
+    legacy per-leaf walk: one schedule instance per pytree leaf, so a
+    transformer's dozens of leaves cost dozens of latency-bound DCN
+    collectives per step.
+  * ``hierarchical_reduce_bucketed`` — the flat-buffer engine
+    (core/buckets.py): the whole tree is packed into fixed-size f32
+    buckets first, then ONE reduce-scatter, ONE cross-pod exchange and
+    ONE gather move the entire stack. This is the hot-path variant;
+    the reduce-scatter over "data" runs before the pack-side quantize,
+    so only 1/data_size of the buffer exists per rank when the DCN leg
+    fires.
+
+This module provides the *manual-collective* building blocks; the train
+step (launch/steps.py) wires them behind ``HetConfig.grad_reduction``
+and ``HetConfig.bucket_mb``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.core import buckets as bkt
 from repro.kernels.quantize import ops as q_ops
 from repro.kernels.quantize import ref as q_ref
 
 
 def _pad_to(x: jnp.ndarray, mult: int) -> jnp.ndarray:
     flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % mult
-    return jnp.pad(flat, (0, pad)) if pad else flat
+    return compat.pad_trailing(flat, (-flat.shape[0]) % mult)
 
 
 def hierarchical_reduce_leaf(
@@ -42,6 +55,8 @@ def hierarchical_reduce_leaf(
     *,
     data_axis: str = "data",
     pod_axis: str = "pod",
+    data_size: int,
+    pod_size: int,
     compress: bool = False,
     block_size: int = 256,
     key: Optional[jax.Array] = None,
@@ -52,7 +67,6 @@ def hierarchical_reduce_leaf(
     tokens). Returns (globally summed gradient, new error state).
     """
     shape = g.shape
-    data_size = jax.lax.axis_size(data_axis)
     flat = _pad_to(g.astype(jnp.float32), data_size)
     # 1) in-pod reduce-scatter over ICI: each rank owns a shard
     shard = jax.lax.psum_scatter(
@@ -64,24 +78,18 @@ def hierarchical_reduce_leaf(
         q, s = q_ops.quantize_int8(corrected, block_size=block_size, key=key)
         deq_local = q_ref.dequantize_int8(q, s, corrected.shape, block_size)
         new_err = corrected - deq_local
-        # int8 payload + fp32 scales cross the DCN link
-        q_sum = jax.lax.psum(q.astype(jnp.int32), pod_axis)
-        s_all = jax.lax.all_gather(s, pod_axis)           # (pods, blocks)
-        # reconstruct: sum of per-pod dequantized shards. int8 values were
-        # summed pre-scale only if scales match; use per-pod scales via
-        # the gathered table: deq_sum = Σ_p q_p * s_p. We recover it from
-        # q_sum only when scales are shared — instead gather q too:
-        # cheaper equivalent: psum of locally-dequantized shard would be
-        # fp32 traffic; to keep int8 on the wire we gather int8 + scales.
-        q_all = jax.lax.all_gather(q, pod_axis)           # (pods, blocks, B)
-        del q_sum
-        deq = jnp.einsum("pbk,pb->bk", q_all.astype(jnp.float32), s_all)
-        shard = deq
+        # int8 payload + per-block scales cross the DCN link; the sum
+        # is rebuilt from the per-pod (values, scales) pairs
+        q_all = compat.manual_all_gather(q, pod_axis, pod_size)
+        s_all = compat.manual_all_gather(s, pod_axis, pod_size)
+        shard = jnp.einsum("pbk,pb->bk", q_all.astype(jnp.float32),
+                           s_all).reshape(-1)[:shard.shape[0]]
     else:
         new_err = err
         shard = jax.lax.psum(shard, pod_axis)
     # 3) in-pod all-gather over ICI to rebuild the full leaf
-    full = jax.lax.all_gather(shard, data_axis).reshape(-1)
+    full = compat.manual_all_gather(shard, data_axis,
+                                    data_size).reshape(-1)
     n = 1
     for d in shape:
         n *= d
@@ -94,11 +102,17 @@ def hierarchical_reduce_tree(
     *,
     data_axis: str = "data",
     pod_axis: str = "pod",
+    data_size: int,
+    pod_size: int,
     compress: bool = False,
     block_size: int = 256,
     key: Optional[jax.Array] = None,
 ) -> Tuple[Any, Optional[Any]]:
-    """Apply hierarchical_reduce_leaf across a gradient pytree."""
+    """LEGACY: apply hierarchical_reduce_leaf across a gradient pytree.
+
+    One full schedule (and its DCN collectives) per leaf — prefer
+    :func:`hierarchical_reduce_bucketed` on hot paths.
+    """
     leaves, treedef = jax.tree.flatten(grads)
     errs = (treedef.flatten_up_to(err_state) if err_state is not None
             else [None] * len(leaves))
@@ -108,11 +122,58 @@ def hierarchical_reduce_tree(
     for g, e, k in zip(leaves, errs, keys):
         o, ne = hierarchical_reduce_leaf(
             g, e, data_axis=data_axis, pod_axis=pod_axis,
+            data_size=data_size, pod_size=pod_size,
             compress=compress, block_size=block_size, key=k)
         outs.append(o)
         nerrs.append(ne)
     new_err = (treedef.unflatten(nerrs) if err_state is not None else None)
     return treedef.unflatten(outs), new_err
+
+
+def hierarchical_reduce_bucketed(
+    grads: Any,
+    err: Optional[jnp.ndarray],
+    layout: bkt.BucketLayout,
+    *,
+    data_axis: str = "data",
+    pod_axis: str = "pod",
+    data_size: int,
+    pod_size: int,
+    compress: bool = False,
+    block_size: int = 256,
+    key: Optional[jax.Array] = None,
+    impl: str = "reference",
+) -> Tuple[Any, Optional[jnp.ndarray]]:
+    """Bucketed 3-level reduction, inside shard_map(manual={pod, data}).
+
+    The whole pytree is packed into the (num_buckets, bucket_elems)
+    stack, reduce-scattered over "data" in ONE collective, the
+    1/data_size shard crosses the DCN link through the bucketed
+    exchange (core/buckets.py — two collectives, int8 payload when
+    ``compress``), and ONE in-pod gather rebuilds the stack. The error
+    state ``err`` is this rank's flat
+    (num_buckets, bucket_elems / data_size) slice.
+
+    The layout must be built with
+    ``multiple_of = data_size * pod_size * block_size``.
+    """
+    flat = bkt.pack_buckets(grads, layout)            # (nb, be)
+    nb, be = flat.shape
+    if be % data_size:
+        raise ValueError(
+            f"bucket_elems {be} not divisible by data_size {data_size}")
+    # 1) in-pod reduce-scatter (ICI): one collective for the whole stack
+    shard = jax.lax.psum_scatter(
+        flat.reshape(nb, data_size, be // data_size), data_axis,
+        scatter_dimension=1, tiled=False)             # (nb, be/data)
+    # 2) cross-pod bucketed exchange (DCN)
+    red, new_err = bkt.exchange_buckets(
+        shard, err, axis=pod_axis, axis_size=pod_size,
+        compress=compress, block_size=block_size, key=key, impl=impl)
+    # 3) in-pod all-gather (ICI): rebuild the full stack
+    full = compat.manual_all_gather(red, data_axis, data_size)
+    flat = jnp.moveaxis(full, 0, 1).reshape(nb, be)
+    return bkt.unpack_buckets(flat, layout), new_err
 
 
 def cross_pod_bytes(grads: Any, num_params_bytes: int = 4,

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_BIG = -1e30
 
 
@@ -172,7 +174,7 @@ def mlstm_scan_pallas(
             pltpu.VMEM((block_h, dk), jnp.float32),
             pltpu.VMEM((block_h, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qt, kt, vt, it, ft)

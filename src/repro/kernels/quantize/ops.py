@@ -25,3 +25,19 @@ def quantize_int8(
 
 def dequantize_int8(q, scale, shape, block_size: int = 256):
     return ref.dequantize_int8(q, scale, shape, block_size)
+
+
+def dequant_accum(q: jnp.ndarray, scale: jnp.ndarray, *,
+                  impl: str = "reference",
+                  interpret: bool = False) -> jnp.ndarray:
+    """Fused receive-side dequantize + accumulate over the rank axis.
+
+    ``q``: (ranks, blocks, block_size) int8, ``scale``: (ranks, blocks)
+    f32 -> (blocks, block_size) f32 shard sum.
+    """
+    if impl == "reference":
+        return ref.dequant_accum(q, scale)
+    if impl == "pallas":
+        from repro.kernels.quantize.quantize import dequant_accum_pallas
+        return dequant_accum_pallas(q, scale, interpret=interpret)
+    raise ValueError(f"unknown dequant_accum impl '{impl}'")

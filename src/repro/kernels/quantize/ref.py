@@ -19,10 +19,12 @@ def quantize_int8(
     key: Optional[jax.Array] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(flat) f32 -> (int8 values, f32 per-block scales)."""
+    from repro import compat
+
     flat = x.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     padded = -(-n // block_size) * block_size
-    flat = jnp.pad(flat, (0, padded - n))
+    flat = compat.pad_trailing(flat, padded - n)
     blocks = flat.reshape(-1, block_size)
     scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-12)
@@ -43,3 +45,15 @@ def dequantize_int8(
     for s in shape:
         n *= s
     return flat[:n].reshape(shape)
+
+
+def dequant_accum(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Fused dequantize-and-accumulate oracle (reduction receive side).
+
+    ``q``: (ranks, blocks, block_size) int8 — one quantized contribution
+    per peer rank; ``scale``: (ranks, blocks) f32 per-block scales.
+    Returns (blocks, block_size) f32 = sum_r q[r] * scale[r] — the
+    summed shard without ever materializing per-rank f32 copies.
+    """
+    return jnp.einsum("rbk,rb->bk", q.astype(jnp.float32),
+                      scale.astype(jnp.float32))

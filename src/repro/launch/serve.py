@@ -17,6 +17,8 @@ import time
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 
 from repro.configs import base as cfgbase
@@ -39,7 +41,7 @@ def serve(args):
 
     params = steps_mod.init_params_sharded(model, mesh,
                                            jax.random.PRNGKey(args.seed))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         prefill = steps_mod.build_prefill_step(model, shape, mesh)
         decode = steps_mod.build_decode_step(model, shape, mesh)
 

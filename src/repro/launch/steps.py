@@ -3,14 +3,25 @@
 ``build_train_step`` assembles the full HetSeq step:
   1. weighted objective over the packed (dummy-padded) global batch —
      per-token weights make heterogeneous capacity exact (core M1/M3);
-  2. optional gradient accumulation scan (core M4);
-  3. gradient reduction:
+  2. optional gradient accumulation scan (core M4, shared scan core in
+     core/accumulate.py);
+  3. gradient reduction, selected by ``HetConfig.grad_reduction`` and
+     ``HetConfig.bucket_mb``:
        * "allreduce"    — paper-faithful: XLA's automatic reduction from
          the shardings (FSDP => reduce-scatter + all-gather);
+       * "bucketed_allreduce" — explicit flat-buffer reduction: grads
+         are packed into fixed-size f32 buckets (core/buckets.py) and
+         reduced with ONE psum_scatter + ONE all_gather over the whole
+         DP axis set, instead of XLA's per-leaf collectives;
        * "hierarchical" — beyond-paper: params replicated over "pod",
          FSDP over "data"; in-pod reduction stays automatic (ICI), the
          cross-pod leg is an explicit shard_map(axis_names={"pod"})
-         collective, optionally int8-compressed with error feedback;
+         collective, optionally int8-compressed with error feedback.
+         With ``bucket_mb > 0`` the cross-pod leg runs the bucketed
+         engine: two collectives per step total, error feedback held
+         in ONE flat (pods, num_buckets, bucket_elems) array; with
+         ``bucket_mb == 0`` the legacy per-leaf walk (one quantize +
+         one gather per leaf) is kept for comparison;
   4. AdamW update (optimizer state sharded like params = ZeRO-1).
 
 ``input_specs`` provides ShapeDtypeStruct stand-ins for every cell of
@@ -26,17 +37,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import (ModelConfig, OptimizerConfig, ShapeConfig,
                                 TrainConfig)
 from repro.core import accumulate as acc
+from repro.core import buckets as bkt
 from repro.core import weighting
-from repro.kernels.quantize import ops as q_ops
-from repro.kernels.quantize import ref as q_ref
 from repro.launch import sharding as shr
 from repro.launch.mesh import dp_axes as mesh_dp_axes, dp_size, tp_axis
 from repro.models.blocks import ParallelCtx
 from repro.models.model import Model
 from repro.optim import adam, lamb, schedules
+
+# quantization block size for the compressed cross-pod exchanges
+_BLOCK = 256
 
 
 def make_parallel_ctx(mesh: Optional[Mesh]) -> ParallelCtx:
@@ -54,7 +68,9 @@ def make_parallel_ctx(mesh: Optional[Mesh]) -> ParallelCtx:
 class TrainState(NamedTuple):
     params: Any
     opt: adam.AdamState
-    err: Any                       # error-feedback pytree or () when unused
+    err: Any                       # error-feedback state or () when unused
+    # bucketed reduction: ONE flat (pods, num_buckets, bucket_elems) f32
+    # array; legacy per-leaf reduction: a (pods, *leaf) pytree mirror
 
 
 def _err_enabled(tcfg: TrainConfig, mesh: Mesh) -> bool:
@@ -64,39 +80,78 @@ def _err_enabled(tcfg: TrainConfig, mesh: Mesh) -> bool:
             and "pod" in mesh.axis_names)
 
 
+def _reduce_axes(tcfg: TrainConfig, mesh: Mesh) -> Tuple[str, ...]:
+    """The mesh axes the explicit bucketed reduction runs over."""
+    if tcfg.het.grad_reduction == "bucketed_allreduce":
+        return mesh_dp_axes(mesh)
+    return ("pod",) if "pod" in mesh.axis_names else ()
+
+
+def bucket_layout(model: Model, tcfg: TrainConfig,
+                  mesh: Mesh) -> Optional[bkt.BucketLayout]:
+    """The gradient bucket grid for this (model, config, mesh) cell.
+
+    The bucket size is rounded so every bucket divides into per-rank
+    shards of whole quantization blocks (ranks * _BLOCK).
+    """
+    if tcfg.het.bucket_mb <= 0:
+        return None
+    axes = _reduce_axes(tcfg, mesh)
+    if not axes:
+        return None
+    ranks = 1
+    for a in axes:
+        ranks *= mesh.shape[a]
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    return bkt.build_layout(params_shape, bucket_mb=tcfg.het.bucket_mb,
+                            multiple_of=ranks * _BLOCK)
+
+
 def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh):
     params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
     opt_shape = jax.eval_shape(
         functools.partial(adam.init_state, cfg=tcfg.optimizer), params_shape)
     if _err_enabled(tcfg, mesh):
         pods = mesh.shape["pod"]
-        err_shape = jax.tree.map(
-            lambda p: jax.ShapeDtypeStruct((pods,) + p.shape, jnp.float32),
-            params_shape)
+        layout = bucket_layout(model, tcfg, mesh)
+        if layout is not None:
+            err_shape: Any = jax.ShapeDtypeStruct(
+                layout.error_shape(pods), jnp.float32)
+        else:
+            err_shape = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct((pods,) + p.shape,
+                                               jnp.float32),
+                params_shape)
     else:
         err_shape = ()
     return TrainState(params=params_shape, opt=opt_shape, err=err_shape)
 
 
+def _strip_axes(spec: P, drop: Tuple[str, ...]) -> P:
+    """Remove the given mesh axes from a PartitionSpec (replicate)."""
+    out = []
+    for ax in spec:
+        if isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a not in drop)
+            out.append(kept if kept else None)
+        else:
+            out.append(None if ax in drop else ax)
+    return P(*out)
+
+
 def state_specs(model: Model, tcfg: TrainConfig, mesh: Mesh) -> TrainState:
     shapes = state_shapes(model, tcfg, mesh)
-    hier = tcfg.het.grad_reduction == "hierarchical"
+    hier = (tcfg.het.grad_reduction == "hierarchical"
+            and "pod" in mesh.axis_names)
+    bucketed_ar = tcfg.het.grad_reduction == "bucketed_allreduce"
     pspecs = shr.param_specs(model.cfg, shapes.params, mesh)
-    if hier and "pod" in mesh.axis_names:
-        # hierarchical mode: params replicated across pods (FSDP = data
-        # only) so the cross-pod gradient leg is ours to schedule
-
-        def strip_pod(spec: P) -> P:
-            out = []
-            for ax in spec:
-                if isinstance(ax, tuple):
-                    kept = tuple(a for a in ax if a != "pod")
-                    out.append(kept if kept else None)
-                else:
-                    out.append(None if ax == "pod" else ax)
-            return P(*out)
-
-        pspecs = jax.tree.map(strip_pod, pspecs,
+    if hier or bucketed_ar:
+        # explicit-reduction modes: params replicated across the manual
+        # reduction axes so the gradient leg is ours to schedule
+        # (hierarchical keeps FSDP over "data"; bucketed_allreduce
+        # replicates over the whole DP set)
+        drop = ("pod",) if hier else _reduce_axes(tcfg, mesh)
+        pspecs = jax.tree.map(lambda s: _strip_axes(s, drop), pspecs,
                               is_leaf=lambda x: isinstance(x, P))
         # token-embedding gathers with a sharded vocab dim hit an XLA
         # SPMD-partitioner bug inside partially-manual regions; shard the
@@ -109,6 +164,8 @@ def state_specs(model: Model, tcfg: TrainConfig, mesh: Mesh) -> TrainState:
     ospecs = adam.AdamState(step=P(), m=pspecs, v=pspecs)
     if shapes.err == ():
         especs: Any = ()
+    elif isinstance(shapes.err, jax.ShapeDtypeStruct):
+        especs = P("pod")              # flat bucketed error state
     else:
         especs = jax.tree.map(lambda s: P("pod", *s), pspecs,
                               is_leaf=lambda x: isinstance(x, P))
@@ -132,7 +189,7 @@ def init_train_state(model: Model, tcfg: TrainConfig, mesh: Mesh,
                 lambda p: jnp.zeros(p.shape, jnp.float32), shapes.err)
         return TrainState(params=params, opt=opt, err=err)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jax.jit(init, out_shardings=shr.named(mesh, specs))(key)
 
 
@@ -140,7 +197,7 @@ def init_params_sharded(model: Model, mesh: Mesh, key):
     """Initialize bare params with the production shardings (serving)."""
     params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
     pspecs = shr.param_specs(model.cfg, params_shape, mesh)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jax.jit(model.init_params,
                        out_shardings=shr.named(mesh, pspecs))(key)
 
@@ -151,7 +208,7 @@ def init_cache_sharded(model: Model, shape: ShapeConfig, mesh: Mesh):
     cache_shape = jax.eval_shape(
         functools.partial(model.init_cache, b, shape.seq_len))
     cspecs = shr.cache_specs(model.cfg, cache_shape, mesh, b)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jax.jit(functools.partial(model.init_cache, b,
                                          shape.seq_len),
                        out_shardings=shr.named(mesh, cspecs))()
@@ -172,9 +229,7 @@ def _quant_lastdim(x: jnp.ndarray, block: int):
     """
     last = x.shape[-1]
     bs = min(block, last)
-    pad = (-last) % bs
-    if pad:
-        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+    x = compat.pad_trailing(x, (-last) % bs)
     nb = x.shape[-1] // bs
     blocks = x.reshape(*x.shape[:-1], nb, bs)
     scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
@@ -189,9 +244,15 @@ def _dequant_lastdim(q: jnp.ndarray, scale: jnp.ndarray, last: int):
     return deq[..., :last]
 
 
-def _cross_pod_reduce(grads: Any, err: Any, compress: str,
-                      block_size: int = 256) -> Tuple[Any, Any]:
-    """Inside shard_map(manual={"pod"}): reduce grads across pods.
+def _cross_pod_reduce(grads: Any, err: Any, compress: str, pods: int,
+                      block_size: int = _BLOCK) -> Tuple[Any, Any]:
+    """LEGACY per-leaf walk, inside shard_map(manual={"pod"}).
+
+    One collective per pytree leaf (compressed: one quantize + one
+    full-payload gather per leaf — O(pods) receive bandwidth). Kept as
+    the comparison baseline for the bucketed engine and for
+    ``bucket_mb == 0`` configs; benchmarks/reduce_bench.py measures the
+    difference.
 
     grads: this pod's gradient contribution (auto-sharded over data).
     err:   (1, *shape) this pod's persistent error-feedback state.
@@ -213,8 +274,8 @@ def _cross_pod_reduce(grads: Any, err: Any, compress: str,
                  if e is not None else e)
         # int8 payload + per-block scales are what cross the DCN link;
         # gathered along a NEW leading pod axis (all shardings preserved)
-        q_all = jax.lax.all_gather(q, "pod")          # (pods, ..., nb, bs)
-        s_all = jax.lax.all_gather(s, "pod")          # (pods, ..., nb)
+        q_all = compat.manual_all_gather(q, "pod", pods)
+        s_all = compat.manual_all_gather(s, "pod", pods)
         deq = jnp.sum(q_all.astype(jnp.float32) * s_all[..., None],
                       axis=0)
         out = deq.reshape(*deq.shape[:-2], -1)[..., :last]
@@ -232,6 +293,35 @@ def _cross_pod_reduce(grads: Any, err: Any, compress: str,
             treedef.unflatten([p[1] for p in pairs]))
 
 
+def _cross_pod_reduce_bucketed(
+    grads: Any,
+    err: Any,
+    compress: str,
+    pods: int,
+    layout: bkt.BucketLayout,
+    impl: str = "reference",
+    block_size: int = _BLOCK,
+) -> Tuple[Any, Any]:
+    """Bucketed cross-pod reduction, inside shard_map(manual={"pod"}).
+
+    Packs the whole gradient pytree into the fixed-size bucket stack,
+    runs ONE fused quantize + ONE payload exchange + ONE gather for the
+    entire tree (core/buckets.py), and unpacks. ``err`` is this pod's
+    (1, num_buckets, bucket_elems) slice of the flat error state, or
+    None when error feedback is off.
+    """
+    flat = bkt.pack_buckets(grads, layout)
+    e = (err.reshape(layout.num_buckets, layout.bucket_elems)
+         if err is not None else None)
+    red, new_e = bkt.exchange_buckets(
+        flat, e, axis="pod", axis_size=pods,
+        compress=(compress != "none"), block_size=block_size, impl=impl)
+    out = bkt.unpack_buckets(red, layout)
+    if new_e is None:
+        return out, None
+    return out, new_e.reshape(1, layout.num_buckets, layout.bucket_elems)
+
+
 # --------------------------------------------------------------------------
 # train step
 # --------------------------------------------------------------------------
@@ -246,14 +336,38 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
     accum = max(1, tcfg.het.accum_steps)
     hier = (tcfg.het.grad_reduction == "hierarchical"
             and "pod" in mesh.axis_names)
+    bucketed_ar = tcfg.het.grad_reduction == "bucketed_allreduce"
     compress = tcfg.het.compression if hier else "none"
+    layout = bucket_layout(model, tcfg, mesh) if (hier or bucketed_ar) \
+        else None
+    if bucketed_ar and layout is None:
+        if not _reduce_axes(tcfg, mesh):
+            raise ValueError(
+                "grad_reduction='bucketed_allreduce' needs a mesh with "
+                f"data-parallel axes; got {mesh.axis_names}")
+        raise ValueError(
+            "grad_reduction='bucketed_allreduce' needs HetConfig."
+            "bucket_mb > 0")
+    use_err = _err_enabled(tcfg, mesh)
+    q_impl = tcfg.het.quantize_impl
     n_dp = dp_size(mesh)
+    dp = mesh_dp_axes(mesh)
+    n_pods = mesh.shape["pod"] if "pod" in mesh.axis_names else 1
 
-    # inside the pod-manual region the "pod" axis must not appear in
-    # sharding constraints — the inner context is data/model only
-    inner_ctx = (ParallelCtx(mesh=mesh, dp_axes=("data",),
-                             tp_axis=tp_axis(mesh)) if hier else ctx)
-    inner_dp = n_dp // mesh.shape["pod"] if hier else n_dp
+    # inside a manual region the manual axes must not appear in sharding
+    # constraints — hierarchical keeps "data" automatic inside the pod
+    # region; bucketed_allreduce makes the whole DP set manual
+    if hier:
+        inner_ctx = ParallelCtx(mesh=mesh, dp_axes=("data",),
+                                tp_axis=tp_axis(mesh))
+        inner_dp = n_dp // n_pods
+    elif bucketed_ar:
+        inner_ctx = ParallelCtx(mesh=mesh, dp_axes=(),
+                                tp_axis=tp_axis(mesh))
+        inner_dp = 1
+    else:
+        inner_ctx = ctx
+        inner_dp = n_dp
 
     def compute_grads(params, batch):
         """Returns (grad_of_sums, obj_sum, weight_sum) — unscaled."""
@@ -267,51 +381,114 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
             return g, o, w
         mbs = acc.split_microbatches(batch, accum, num_ranks=inner_dp)
 
-        def body(carry, mb):
-            g_acc, o_acc, w_acc = carry
-            (o, w), g = grad_fn(params, mb)
-            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
-                                 g_acc, g)
-            return (g_acc, o_acc + o, w_acc + w), None
-
         # accumulation carry dtype: fp32, except when params are stored
         # bf16 (arctic/deepseek giants) where an fp32 carry alone would
         # blow the 16 GB budget — bf16 carry, documented in EXPERIMENTS
         def carry_dtype(p):
             return p.dtype if p.dtype == jnp.bfloat16 else jnp.float32
 
-        zeros = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, carry_dtype(p)), params)
-        (g, o, w), _ = jax.lax.scan(
-            body, (zeros, jnp.zeros((), jnp.float32),
-                   jnp.zeros((), jnp.float32)), mbs)
-        return g, o, w
+        return acc.scan_accumulate(grad_fn, params, mbs,
+                                   carry_dtype=carry_dtype)
+
+    def apply_pod_reduce(g, err):
+        """The cross-pod leg: bucketed engine or legacy per-leaf walk."""
+        if layout is not None:
+            g, ne = _cross_pod_reduce_bucketed(
+                g, err if use_err else None, compress, n_pods,
+                layout, impl=q_impl)
+            return g, (ne if ne is not None else ())
+        return _cross_pod_reduce(g, err, compress, n_pods)
+
+    def vmapped_rank_grads(params, batch, ranks, rank_spec):
+        """Per-rank stacked grads computed OUTSIDE the manual region.
+
+        Old jaxlibs cannot lower grad-of-scan (the layer stack, chunked
+        CE, accumulation) inside a partially-manual shard_map region —
+        the SPMD partitioner check-fails. Fallback: reshape the batch
+        rank-major, vmap the grad over the rank dim (plain SPMD — the
+        vmap dim shards over the reduction axes), and enter the manual
+        region only for the reduction itself.
+        """
+        sb = jax.tree.map(
+            lambda v: jax.lax.with_sharding_constraint(
+                v.reshape(ranks, v.shape[0] // ranks, *v.shape[1:]),
+                rank_spec), batch)
+        g, o, w = jax.vmap(compute_grads, in_axes=(None, 0))(params, sb)
+        return g, jnp.sum(o), jnp.sum(w)
 
     def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
         if hier:
-            pspecs_in = state_specs(model, tcfg, mesh).params
+            if compat.NATIVE_MANUAL_COLLECTIVES:
+                pspecs_in = state_specs(model, tcfg, mesh).params
 
-            def pod_local(params, b, err):
-                g, o, w = compute_grads(params, b)
-                # inside the partially-manual region XLA's sharding
-                # propagation can lose the (data, model) layout of the
-                # gradients; re-pin them to the param specs so the pod
-                # exchange moves shards, not replicated leaves
-                g = jax.tree.map(
-                    lambda gr, s: jax.lax.with_sharding_constraint(gr, s),
-                    g, pspecs_in)
-                g, new_err = _cross_pod_reduce(g, err, compress)
-                return g, jax.lax.psum(o, "pod"), jax.lax.psum(w, "pod"), \
-                    new_err
+                def pod_local(params, b, err):
+                    g, o, w = compute_grads(params, b)
+                    # inside the partially-manual region XLA's sharding
+                    # propagation can lose the (data, model) layout of
+                    # the gradients; re-pin them to the param specs so
+                    # the pod exchange moves shards, not replicated
+                    # leaves
+                    g = jax.tree.map(
+                        lambda gr, s: jax.lax.with_sharding_constraint(
+                            gr, s),
+                        g, pspecs_in)
+                    g, ne = apply_pod_reduce(g, err)
+                    return g, jax.lax.psum(o, "pod"), \
+                        jax.lax.psum(w, "pod"), ne
 
-            grads, o, w, new_err = jax.shard_map(
-                pod_local, mesh=mesh,
-                in_specs=(P(), P("pod"), P("pod") if state.err != ()
-                          else P()),
-                out_specs=(P(), P(), P(), P("pod") if state.err != ()
-                           else P()),
-                axis_names={"pod"}, check_vma=False,
-            )(state.params, batch, state.err)
+                grads, o, w, new_err = compat.shard_map(
+                    pod_local, mesh=mesh,
+                    in_specs=(P(), P("pod"), P("pod") if use_err
+                              else P()),
+                    out_specs=(P(), P(), P(), P("pod") if use_err
+                               else P()),
+                    axis_names={"pod"}, check_vma=False,
+                )(state.params, batch, state.err)
+            else:
+                g, o, w = vmapped_rank_grads(state.params, batch, n_pods,
+                                             P("pod", "data"))
+
+                def pod_reduce(gl, err):
+                    return apply_pod_reduce(
+                        jax.tree.map(lambda a: a[0], gl), err)
+
+                grads, new_err = compat.shard_map(
+                    pod_reduce, mesh=mesh,
+                    in_specs=(P("pod"), P("pod") if use_err else P()),
+                    out_specs=(P(), P("pod") if use_err else P()),
+                    axis_names={"pod"}, check_vma=False,
+                )(g, state.err)
+        elif bucketed_ar:
+            axis = dp if len(dp) > 1 else dp[0]
+
+            def reduce_buckets(g):
+                flat = bkt.pack_buckets(g, layout)
+                red, _ = bkt.exchange_buckets(flat, None, axis=axis,
+                                              axis_size=n_dp)
+                return bkt.unpack_buckets(red, layout)
+
+            if compat.NATIVE_MANUAL_COLLECTIVES:
+                def dp_local(params, b):
+                    g, o, w = compute_grads(params, b)
+                    return reduce_buckets(g), jax.lax.psum(o, dp), \
+                        jax.lax.psum(w, dp)
+
+                grads, o, w = compat.shard_map(
+                    dp_local, mesh=mesh,
+                    in_specs=(P(), P(dp)),
+                    out_specs=(P(), P(), P()),
+                    axis_names=set(dp), check_vma=False,
+                )(state.params, batch)
+            else:
+                g, o, w = vmapped_rank_grads(state.params, batch, n_dp,
+                                             P(dp))
+                grads = compat.shard_map(
+                    lambda gl: reduce_buckets(
+                        jax.tree.map(lambda a: a[0], gl)),
+                    mesh=mesh, in_specs=P(dp), out_specs=P(),
+                    axis_names=set(dp), check_vma=False,
+                )(g)
+            new_err = state.err
         else:
             grads, o, w = compute_grads(state.params, batch)
             new_err = state.err

@@ -22,6 +22,8 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 
 from repro.checkpoint.checkpoint import CheckpointManager
@@ -63,6 +65,7 @@ def build_everything(args):
             if args.capacities else (),
             grad_reduction=args.grad_reduction,
             compression=args.compression,
+            bucket_mb=args.bucket_mb,
             accum_steps=args.accum),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   warmup_steps=args.warmup,
@@ -100,7 +103,7 @@ def train(args) -> Dict[str, float]:
     sampler = HetSampler(ds, plan, seed=tcfg.seed)
     loader = PrefetchLoader(sampler, depth=args.prefetch)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step_fn = steps_mod.build_train_step(model, tcfg, mesh)
         state = steps_mod.init_train_state(model, tcfg, mesh,
                                            jax.random.PRNGKey(tcfg.seed))
@@ -121,7 +124,7 @@ def train(args) -> Dict[str, float]:
     losses = []
     t_start = time.time()
     epoch = 0
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         while step < args.steps:
             for raw in loader.iter_epoch(epoch):
                 if step >= args.steps:
@@ -179,9 +182,13 @@ def main():
     ap.add_argument("--capacities", default="",
                     help="per-DP-rank relative capacities, e.g. 2,1,1,0")
     ap.add_argument("--grad-reduction", default="allreduce",
-                    choices=["allreduce", "hierarchical"])
+                    choices=["allreduce", "bucketed_allreduce",
+                             "hierarchical"])
     ap.add_argument("--compression", default="none",
                     choices=["none", "int8"])
+    ap.add_argument("--bucket-mb", type=float, default=0.0,
+                    help="bucketed flat-buffer reduction: bucket payload"
+                         " in MiB of f32 (0 = legacy per-leaf walk)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "lamb"],

@@ -15,6 +15,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -510,7 +512,7 @@ def moe_block(params, x: jnp.ndarray, cfg: ModelConfig,
         # mesh=None -> ambient mesh: a concrete all-Auto mesh object
         # would clash with the partially-manual context inside the
         # hierarchical pod reduction (nested shard_map)
-        out, aux = jax.shard_map(
+        out, aux = compat.shard_map(
             sharded_moe, mesh=None,
             in_specs=(spec_x, P(None, None),
                       P(ctx.tp_axis, None, None), P(ctx.tp_axis, None, None),

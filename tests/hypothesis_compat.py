@@ -1,0 +1,91 @@
+"""`hypothesis` with a deterministic fallback when it is not installed.
+
+The container may not ship hypothesis; rather than erroring at
+collection (which takes the whole tier-1 suite down), property tests
+import ``given / settings / st`` from here. When hypothesis is absent a
+minimal shim runs each property against a fixed number of
+deterministically sampled examples — far weaker than real hypothesis
+(no shrinking, no database), but the invariants still get exercised.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def filter(self, pred):
+            def draw(rnd):
+                for _ in range(1000):
+                    v = self._draw(rnd)
+                    if pred(v):
+                        return v
+                raise ValueError("fallback strategy filter too strict")
+            return _Strategy(draw)
+
+        def map(self, fn):
+            return _Strategy(lambda rnd: fn(self._draw(rnd)))
+
+        def example_from(self, rnd):
+            return self._draw(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rnd: [elements.example_from(rnd)
+                             for _ in range(rnd.randint(min_size,
+                                                        max_size))])
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rnd: rnd.choice(items))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+    st = _Strategies()
+
+    def given(**strategies):
+        def deco(f):
+            def wrapper(*args, **kwargs):
+                rnd = random.Random(0)
+                n = min(getattr(f, "_max_examples", _FALLBACK_EXAMPLES),
+                        25)
+                for _ in range(n):
+                    drawn = {k: s.example_from(rnd)
+                             for k, s in strategies.items()}
+                    f(*args, **kwargs, **drawn)
+
+            # pytest must only see the fixture params, not the drawn ones
+            sig = inspect.signature(f)
+            fixture_params = [p for name, p in sig.parameters.items()
+                              if name not in strategies]
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            return wrapper
+        return deco
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco

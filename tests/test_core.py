@@ -1,11 +1,12 @@
-"""Core modules: compression/error feedback, straggler, elastic."""
+"""Core modules: compression/error feedback, accumulation, straggler,
+elastic."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
-from repro.core import capacity, compression, elastic, straggler
+from repro.core import accumulate, capacity, compression, elastic, straggler
 
 
 # --------------------------------------------------------------------------
@@ -50,6 +51,76 @@ def test_compression_ratio():
     g = {"a": jnp.zeros((1024, 1024))}
     r = compression.compression_ratio(g, block_size=256)
     assert 0.25 < r < 0.27          # int8 + fp32 scale per 256 block
+
+
+# --------------------------------------------------------------------------
+# accumulation scan core
+# --------------------------------------------------------------------------
+
+
+def test_split_microbatches_error_cases():
+    batch = {"x": jnp.zeros((12, 4))}
+    # 12 rows: accum=5 never divides
+    with pytest.raises(ValueError, match="not divisible"):
+        accumulate.split_microbatches(batch, accum_steps=5)
+    # divisible by accum alone but not by accum x ranks
+    with pytest.raises(ValueError, match="not divisible"):
+        accumulate.split_microbatches(batch, accum_steps=4, num_ranks=5)
+    # valid split preserves shape bookkeeping
+    mbs = accumulate.split_microbatches(batch, accum_steps=3, num_ranks=2)
+    assert mbs["x"].shape == (3, 4, 4)
+
+
+def test_split_microbatches_rank_locality():
+    """Every microbatch must take an equal slice of EVERY rank's rows."""
+    rows = jnp.arange(8)[:, None] * jnp.ones((1, 2))
+    mbs = accumulate.split_microbatches({"x": rows}, accum_steps=2,
+                                        num_ranks=2)
+    # rank 0 owns rows 0-3, rank 1 rows 4-7; microbatch 0 must hold the
+    # first half of each rank's buffer
+    np.testing.assert_array_equal(
+        np.asarray(mbs["x"][0, :, 0]), [0, 1, 4, 5])
+    np.testing.assert_array_equal(
+        np.asarray(mbs["x"][1, :, 0]), [2, 3, 6, 7])
+
+
+def test_scan_accumulate_matches_direct_sum():
+    """The shared scan core returns unscaled sums identical to a loop."""
+    params = {"w": jnp.array([1.0, -2.0, 0.5])}
+    mbs = {"x": jnp.arange(12.0).reshape(3, 4)}
+
+    def obj(p, mb):
+        o = (p["w"].sum() * mb["x"]).sum()
+        return o, jnp.float32(mb["x"].size)
+
+    grad_fn = jax.value_and_grad(obj, has_aux=True)
+    g, o, w = accumulate.scan_accumulate(grad_fn, params, mbs)
+    assert float(w) == 12.0
+    ref_o = sum(float(obj(params, {"x": mbs["x"][i]})[0]) for i in range(3))
+    assert abs(float(o) - ref_o) < 1e-5
+    np.testing.assert_allclose(np.asarray(g["w"]),
+                               np.full((3,), float(mbs["x"].sum())),
+                               rtol=1e-6)
+
+
+def test_scan_accumulate_carry_dtype_policy():
+    params = {"a": jnp.zeros((2,), jnp.bfloat16),
+              "b": jnp.zeros((2,), jnp.float32)}
+    mbs = {"x": jnp.ones((2, 2))}
+
+    def obj(p, mb):
+        o = ((p["a"].astype(jnp.float32) + p["b"]) * mb["x"]).sum()
+        return o, jnp.float32(1.0)
+
+    grad_fn = jax.value_and_grad(obj, has_aux=True)
+
+    def carry_dtype(p):
+        return p.dtype if p.dtype == jnp.bfloat16 else jnp.float32
+
+    g, _, _ = accumulate.scan_accumulate(grad_fn, params, mbs,
+                                         carry_dtype=carry_dtype)
+    assert g["a"].dtype == jnp.bfloat16
+    assert g["b"].dtype == jnp.float32
 
 
 # --------------------------------------------------------------------------

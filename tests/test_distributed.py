@@ -38,6 +38,7 @@ def test_spmd_train_step_equals_single_process():
             OptimizerConfig, ShapeConfig
         from repro.models.model import build_model
         from repro.launch import steps
+        from repro import compat
         from repro.core import capacity, dummy, weighting
         from repro.data import synthetic
         import dataclasses
@@ -57,7 +58,7 @@ def test_spmd_train_step_equals_single_process():
         packed = dummy.pack_global_batch(
             {"inputs": rec["inputs"][:, :16],
              "labels": rec["labels"][:, :16]}, plan)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             state = steps.init_train_state(m, tcfg, mesh,
                                            jax.random.PRNGKey(0))
             step = steps.build_train_step(m, tcfg, mesh)
@@ -81,19 +82,23 @@ def test_spmd_train_step_equals_single_process():
 
 @pytest.mark.slow
 def test_reduction_modes_agree():
-    """allreduce vs hierarchical (exact) produce identical trajectories;
+    """allreduce vs hierarchical vs the bucketed engine (per-leaf and
+    flat-buffer) produce identical trajectories on the exact paths;
     int8-compressed stays within quantization tolerance."""
     out = run_child("""
+        import dataclasses
         import jax, jax.numpy as jnp
         from repro.configs import base
         from repro.configs.base import TrainConfig, HetConfig, \\
             OptimizerConfig, ShapeConfig
         from repro.models.model import build_model
         from repro.launch import steps
+        from repro import compat
         from repro.core import capacity, dummy
         from repro.data import synthetic
 
-        cfg = base.smoke_config("olmo-1b")
+        cfg = dataclasses.replace(base.smoke_config("olmo-1b"),
+                                  compute_dtype="float32")
         m = build_model(cfg)
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         shape = ShapeConfig("t", 16, 8, "train")
@@ -103,13 +108,14 @@ def test_reduction_modes_agree():
             {"inputs": rec["inputs"][:, :16],
              "labels": rec["labels"][:, :16]}, plan)
 
-        def run(mode, compress):
+        def run(mode, compress, bucket_mb=0.0):
             tcfg = TrainConfig(model=cfg, shape=shape,
                                het=HetConfig(grad_reduction=mode,
-                                             compression=compress),
+                                             compression=compress,
+                                             bucket_mb=bucket_mb),
                                optimizer=OptimizerConfig(
                                    lr=1e-3, warmup_steps=2))
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 state = steps.init_train_state(m, tcfg, mesh,
                                                jax.random.PRNGKey(0))
                 step = steps.build_train_step(m, tcfg, mesh)
@@ -122,13 +128,106 @@ def test_reduction_modes_agree():
 
         base_l = run("allreduce", "none")
         hier_l = run("hierarchical", "none")
+        hierb_l = run("hierarchical", "none", bucket_mb=0.05)
         comp_l = run("hierarchical", "int8")
-        print(base_l, hier_l, comp_l)
-        for a, b in zip(base_l, hier_l):
-            assert abs(a - b) < 2e-3, (a, b)
-        for a, b in zip(base_l, comp_l):
-            assert abs(a - b) < 3e-2, (a, b)
+        compb_l = run("hierarchical", "int8", bucket_mb=0.05)
+        bar_l = run("bucketed_allreduce", "none", bucket_mb=0.05)
+        print(base_l, hier_l, hierb_l, comp_l, compb_l, bar_l)
+        for exact in (hier_l, hierb_l, bar_l):
+            for a, b in zip(base_l, exact):
+                assert abs(a - b) < 2e-3, (a, b)
+        for comp in (comp_l, compb_l):
+            for a, b in zip(base_l, comp):
+                assert abs(a - b) < 3e-2, (a, b)
         assert comp_l[-1] < comp_l[0]
+        assert compb_l[-1] < compb_l[0]
+        print("OK")
+        """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_bucketed_exchange_matches_per_leaf_psum():
+    """Direct equivalence under the 8-device mesh: the bucketed
+    flat-buffer exchange == per-leaf psum (exact) and stays within int8
+    tolerance compressed, with error feedback capturing the residual."""
+    out = run_child("""
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro import compat
+        from repro.core import buckets as bkt
+        from repro.core import hierarchical as hier
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        pods = 2
+        k = jax.random.PRNGKey(0)
+        tree = {"w": jax.random.normal(k, (67, 33)),
+                "b": jax.random.normal(jax.random.fold_in(k, 1), (129,)),
+                "s": jax.random.normal(jax.random.fold_in(k, 2),
+                                       (3, 7, 5)).astype(jnp.bfloat16)}
+        layout = bkt.build_layout(tree, bucket_mb=1e-3,
+                                  multiple_of=pods * 256)
+        stacked = jax.tree.map(
+            lambda v: jnp.stack([v, (-0.5 * v.astype(jnp.float32)
+                                     ).astype(v.dtype)]), tree)
+        ref = jax.tree.map(
+            lambda v: np.asarray(v, np.float32) * 0.5, tree)
+
+        def bucketed(compress):
+            def f(gl):
+                g = jax.tree.map(lambda a: a[0], gl)
+                flat = bkt.pack_buckets(g, layout)
+                red, _ = bkt.exchange_buckets(
+                    flat, None, axis="pod", axis_size=pods,
+                    compress=compress)
+                return bkt.unpack_buckets(red, layout)
+            return jax.jit(compat.shard_map(
+                f, mesh=mesh, in_specs=P("pod"), out_specs=P(),
+                axis_names={"pod"}, check_vma=False))
+
+        def per_leaf_psum(gl):
+            g = jax.tree.map(lambda a: a[0].astype(jnp.float32), gl)
+            return jax.tree.map(lambda a: jax.lax.psum(a, "pod"), g)
+
+        exact = bucketed(False)(stacked)
+        plain = jax.jit(compat.shard_map(
+            per_leaf_psum, mesh=mesh, in_specs=P("pod"), out_specs=P(),
+            axis_names={"pod"}, check_vma=False))(stacked)
+        for a, b, c in zip(jax.tree.leaves(exact), jax.tree.leaves(ref),
+                           jax.tree.leaves(plain)):
+            np.testing.assert_allclose(np.asarray(a, np.float32), b,
+                                       atol=2e-2)   # bf16 leaf storage
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(c, np.float32),
+                atol=2e-2)
+        # f32 leaves must be exact vs the per-leaf psum
+        np.testing.assert_allclose(np.asarray(exact["w"]),
+                                   np.asarray(plain["w"]), atol=1e-5)
+
+        comp = bucketed(True)(stacked)
+        for a, b in zip(jax.tree.leaves(comp), jax.tree.leaves(ref)):
+            scale = max(1e-3, float(np.abs(b).max()))
+            assert float(np.abs(np.asarray(a, np.float32) - b).max()) \\
+                < 0.05 * scale + 0.02
+
+        # 3-level bucketed hierarchical (manual over pod AND data)
+        layout3 = bkt.build_layout(tree, bucket_mb=1e-3,
+                                   multiple_of=2 * pods * 256)
+        def f3(gl):
+            g = jax.tree.map(lambda a: a[0], gl)
+            out, _ = hier.hierarchical_reduce_bucketed(
+                g, None, layout3, data_size=2, pod_size=pods)
+            return out
+        stacked4 = jax.tree.map(
+            lambda v: jnp.stack([v.astype(jnp.float32)] * 4), tree)
+        out3 = jax.jit(compat.shard_map(
+            f3, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(),
+            axis_names={"pod", "data"}, check_vma=False))(stacked4)
+        for a, b in zip(jax.tree.leaves(out3), jax.tree.leaves(tree)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32),
+                4 * np.asarray(b, np.float32), rtol=2e-2, atol=5e-2)
         print("OK")
         """)
     assert "OK" in out
@@ -163,6 +262,7 @@ def test_elastic_restart_resumes_identically():
             OptimizerConfig, ShapeConfig
         from repro.models.model import build_model
         from repro.launch import steps
+        from repro import compat
         from repro.core import capacity, dummy
         from repro.data import synthetic
         from repro.checkpoint.checkpoint import CheckpointManager
@@ -185,7 +285,7 @@ def test_elastic_restart_resumes_identically():
         tcfg = TrainConfig(model=cfg, shape=shape, het=HetConfig(),
                            optimizer=ocfg)
         plan4 = capacity.plan_capacities(8, [1, 1, 1, 1])
-        with jax.set_mesh(mesh2):
+        with compat.set_mesh(mesh2):
             state = steps.init_train_state(m, tcfg, mesh2,
                                            jax.random.PRNGKey(0))
             step2 = steps.build_train_step(m, tcfg, mesh2)
@@ -200,7 +300,7 @@ def test_elastic_restart_resumes_identically():
 
             # phase 2: pod lost -> re-mesh to single pod, restore, resume
             mesh1 = jax.make_mesh((4, 2), ("data", "model"))
-            with jax.set_mesh(mesh1):
+            with compat.set_mesh(mesh1):
                 fresh = steps.init_train_state(m, tcfg, mesh1,
                                                jax.random.PRNGKey(0))
                 restored_host, meta = mgr.restore(jax.device_get(fresh))

@@ -247,6 +247,37 @@ def test_quantize_stochastic_unbiased():
     assert abs(float(jnp.mean(xd - x))) < 1e-4
 
 
+@pytest.mark.parametrize("ranks,blocks,bs", [(2, 8, 256), (4, 300, 128),
+                                             (3, 5, 64)])
+def test_dequant_accum_pallas_vs_ref(ranks, blocks, bs):
+    """Fused receive-side dequant+accumulate == per-rank dequant sum."""
+    from repro.kernels.quantize.quantize import dequant_accum_pallas
+    ks = jax.random.split(jax.random.PRNGKey(13), 2)
+    q = jax.random.randint(ks[0], (ranks, blocks, bs), -127,
+                           128).astype(jnp.int8)
+    s = jax.random.uniform(ks[1], (ranks, blocks)) * 0.1
+    out_p = dequant_accum_pallas(q, s, interpret=True)
+    out_r = q_ref.dequant_accum(q, s)
+    # unrolled-accumulate vs einsum reassociate: fp noise only
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-5)
+    # the oracle itself == explicit per-rank dequantize-then-add
+    manual = sum(np.asarray(q[r], np.float32) *
+                 np.asarray(s[r])[:, None] for r in range(ranks))
+    np.testing.assert_allclose(np.asarray(out_r), manual, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_bucketed_quantize_single_fused_call_roundtrip():
+    """The bucket-stack view (nb, ranks, shard) quantizes in ONE call
+    and dequantizes back within int8 tolerance."""
+    x = jax.random.normal(jax.random.PRNGKey(14), (3, 2, 512)) * 2
+    q, s = q_ref.quantize_int8(x, block_size=256)
+    assert q.shape == (3 * 2 * 512 // 256, 256)
+    xd = q_ref.dequantize_int8(q, s, x.shape, 256)
+    assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) * 0.51
+
+
 # --------------------------------------------------------------------------
 # MLA flash decode
 # --------------------------------------------------------------------------
