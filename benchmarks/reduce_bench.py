@@ -130,7 +130,8 @@ def bench_paths(tree: Dict[str, jnp.ndarray], mesh, pods: int,
             flat = bkt.pack_buckets(g, layout)
             red, _ = bkt.exchange_buckets(
                 flat, None, axis="pod", axis_size=pods,
-                compress=compress, block_size=_BLOCK)
+                compress=compress, block_size=_BLOCK,
+                total=layout.total)
             return bkt.unpack_buckets(red, layout)
         return f
 
@@ -206,6 +207,15 @@ def check_invariants(res: Dict[str, Any]) -> None:
     # exact paths must agree to fp tolerance; int8 to quantization tol
     assert res["bucketed"]["max_abs_err"] <= 1e-5
     assert res["per_leaf"]["max_abs_err"] <= 1e-5
+    # the bucketed int8 wire payload counts DATA blocks only (the
+    # all-padding tail blocks are never transmitted): packing whole
+    # streams can never model MORE DCN bytes than quantizing leaf by
+    # leaf, which pads every leaf up to a block boundary
+    assert (res["bucketed_int8"]["modeled_dcn_bytes_per_rank"]
+            <= res["per_leaf_int8"]["modeled_dcn_bytes_per_rank"]), (
+        "bucketed int8 models more DCN bytes than per-leaf int8 "
+        f"({res['bucketed_int8']['modeled_dcn_bytes_per_rank']} > "
+        f"{res['per_leaf_int8']['modeled_dcn_bytes_per_rank']})")
 
 
 def main(quick: bool = False, out: str = "BENCH_reduce.json",

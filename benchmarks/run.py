@@ -15,7 +15,14 @@ DOC = """Benchmark suite — one entry per paper table/figure + roofline.
   roofline_bench       §Roofline table from dry-run artifacts
   reduce_bench         per-leaf vs bucketed gradient reduction (--quick
                        smoke: fails loudly if the bucketed engine's
-                       cross-pod collective count regresses)
+                       cross-pod collective count or modeled int8 DCN
+                       bytes regress)
+  overlap_bench        monolithic vs double-buffered per-bucket fused
+                       reduce+update pipeline (--quick smoke: fails
+                       loudly if the modeled overlapped step time is
+                       not strictly below the serial modeled time, or
+                       the fused pipeline diverges from the monolithic
+                       update)
 
 Prints a ``name,us_per_call,derived`` CSV summary at the end.
 """
@@ -28,14 +35,20 @@ def main() -> None:
     t_all = time.time()
     csv = []
 
-    from benchmarks import (equivalence, reduce_bench, roofline_bench,
-                            scaling_bert, scaling_small,
+    from benchmarks import (equivalence, overlap_bench, reduce_bench,
+                            roofline_bench, scaling_bert, scaling_small,
                             scaling_translation)
 
     rb = reduce_bench.main(quick=True)
     csv.append(("reduce_bench", rb["bucketed"]["avg_ms"] * 1e3,
                 f"collectives_bucketed={rb['bucketed']['collectives']} "
                 f"vs_per_leaf={rb['per_leaf']['collectives']}"))
+
+    ob = overlap_bench.main(quick=True)
+    csv.append(("overlap_bench", ob["fp32"]["overlap"]["avg_ms"] * 1e3,
+                f"model_speedup_int8="
+                f"{ob['int8']['model']['model_speedup']:.2f}x "
+                f"exact_fp32={ob['fp32']['exact_match']}"))
 
     t0 = time.time()
     res = scaling_translation.main(max_nodes=8, steps=10)

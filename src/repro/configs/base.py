@@ -224,6 +224,21 @@ class HetConfig:
     exchange: "reference" (pure jnp, portable) or "pallas" (fused TPU
     kernels: one quantize launch per step over the concatenated bucket
     stack plus the fused dequant-accumulate receive kernel).
+
+    ``overlap`` schedules the bucketed engine (both explicit reduction
+    modes, requires ``bucket_mb > 0``):
+      * "none"    — monolithic: pack -> 2 collectives -> unpack ->
+        tree-wide optimizer update, strictly serial;
+      * "buckets" — double-buffered per-bucket pipeline: bucket k+1's
+        quantize/pack overlaps bucket k's in-flight exchange, and the
+        flat-view optimizer update for bucket k is fused into the
+        pipeline the moment its reduced payload lands (AdamW moments
+        then live packed as one (num_buckets, bucket_elems) array in
+        TrainState, replicated over the reduction axes). Global-norm
+        clipping (and LAMB's per-layer trust ratios) need every
+        bucket's reduced payload, so those configs keep the pipelined
+        exchange but apply the flat update after a barrier.
+        benchmarks/overlap_bench.py models the pipeline timeline.
     """
 
     capacities: Tuple[float, ...] = ()      # empty => homogeneous
@@ -233,6 +248,7 @@ class HetConfig:
     error_feedback: bool = True
     bucket_mb: float = 0.0                  # >0 => bucketed flat-buffer engine
     quantize_impl: str = "reference"        # reference | pallas
+    overlap: str = "none"                   # none | buckets (pipelined)
     accum_steps: int = 1                    # delayed update (paper M4)
     straggler_ema: float = 0.9
     replan_interval: int = 100              # steps between capacity replans

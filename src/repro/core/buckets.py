@@ -44,11 +44,29 @@ production mesh prefer ``hierarchical_reduce_bucketed``
 first so only 1/data_size of the buffer exists per rank when the DCN
 exchange runs.
 
+Overlap mode (``HetConfig.overlap="buckets"``): ``exchange_buckets``
+reduces the whole stack in two monolithic collectives, so the link and
+the accelerator take turns idling. ``exchange_buckets_overlapped``
+restructures the same schedule into a double-buffered per-bucket
+pipeline: bucket *k+1*'s quantize/pack runs while bucket *k*'s
+exchange is in flight, and an optional ``bucket_fn`` hook consumes each
+reduced bucket as it lands (the train step fuses the per-bucket AdamW
+update there — see optim/adam.py::apply_update_flat). The pipeline
+costs 2 collectives *per bucket* instead of 2 total — the latency/
+overlap trade a heterogeneous DCN link wants once buckets are sized to
+hide the launch overhead. On current jax the pipeline is a
+``lax.scan``; the old-jaxlib SPMD partitioner check-fails on
+collectives inside a scan in a partially-manual region, so the compat
+path unrolls the identical body in python (same dependency structure,
+nb-times-larger HLO).
+
 Config: ``HetConfig.bucket_mb`` (0 = legacy per-leaf paths),
-``HetConfig.quantize_impl`` selects the reference vs Pallas kernels.
-Benchmark: benchmarks/reduce_bench.py emits BENCH_reduce.json with
-collective-launch counts, modeled DCN bytes and measured step times for
-per-leaf vs bucketed on the 8-device host mesh.
+``HetConfig.quantize_impl`` selects the reference vs Pallas kernels,
+``HetConfig.overlap`` selects the monolithic vs pipelined schedule.
+Benchmarks: benchmarks/reduce_bench.py emits BENCH_reduce.json
+(collective-launch counts, modeled DCN bytes, measured step times);
+benchmarks/overlap_bench.py emits BENCH_overlap.json (modeled
+per-bucket pipeline timeline + measured wall times).
 """
 from __future__ import annotations
 
@@ -163,6 +181,48 @@ def init_error_buckets(layout: BucketLayout) -> jnp.ndarray:
 
 
 # --------------------------------------------------------------------------
+# flat views of per-leaf structure (for the packed optimizer path)
+# --------------------------------------------------------------------------
+
+
+def decay_mask(layout: BucketLayout) -> jnp.ndarray:
+    """(num_buckets, bucket_elems) int8 weight-decay mask.
+
+    1 for elements whose source leaf is a matrix (ndim >= 2 — the
+    decay-matrices-only AdamW rule in optim/adam.py), 0 for vector /
+    scalar leaves and for bucket padding. Lets the flat-view optimizer
+    (``apply_update_flat``) reproduce the per-leaf decay policy without
+    unpacking. int8 storage: the mask is a param-sized replicated
+    constant — 1 byte/param, cast to f32 at the single multiply site.
+    """
+    import numpy as np
+
+    mask = np.zeros(layout.padded_total, np.int8)
+    for off, n, shape in zip(layout.offsets, layout.sizes, layout.shapes):
+        if len(shape) >= 2:
+            mask[off:off + n] = 1
+    return jnp.asarray(
+        mask.reshape(layout.num_buckets, layout.bucket_elems))
+
+
+def segment_ids(layout: BucketLayout) -> jnp.ndarray:
+    """(num_buckets, bucket_elems) int32 leaf index per element.
+
+    Bucket padding maps to ``len(layout.sizes)`` (one past the last
+    leaf) so per-leaf segment reductions (LAMB trust ratios) can drop
+    it. Leaves may span bucket boundaries — segment reductions over the
+    flattened stack see each leaf whole regardless.
+    """
+    import numpy as np
+
+    ids = np.full(layout.padded_total, len(layout.sizes), np.int32)
+    for i, (off, n) in enumerate(zip(layout.offsets, layout.sizes)):
+        ids[off:off + n] = i
+    return jnp.asarray(
+        ids.reshape(layout.num_buckets, layout.bucket_elems))
+
+
+# --------------------------------------------------------------------------
 # the exchange schedule
 # --------------------------------------------------------------------------
 
@@ -178,6 +238,7 @@ def exchange_buckets(
     key: Optional[jax.Array] = None,
     impl: str = "reference",
     interpret: bool = False,
+    total: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Inside shard_map(manual over ``axis``): all-reduce the stack.
 
@@ -189,6 +250,15 @@ def exchange_buckets(
     Exactly two collectives cross the link regardless of bucket or leaf
     count; compressed mode keeps int8 (+bit-cast scales) on the wire in
     both directions.
+
+    ``total``: real (pre-padding) element count of the stream
+    (``layout.total``). When given, compressed mode skips the quantize
+    kernel over the all-padding tail blocks — their payload is
+    constant zeros, which a native ragged exchange never puts on the
+    wire (``modeled_link_bytes`` counts data blocks only). Only valid
+    when the stack holds the full stream in flat order (NOT the
+    data-scattered shard inside ``hierarchical_reduce_bucketed``,
+    where the padding tail lives on a subset of ranks).
     """
     nb, be = buckets.shape
     p = axis_size
@@ -221,14 +291,44 @@ def exchange_buckets(
         # decorrelate stochastic rounding across ranks
         key = jax.random.fold_in(key, jnp.argmax(onehot).astype(jnp.int32))
 
-    # ONE fused quantize over the whole concatenated bucket stack
-    q, s = q_ops.quantize_int8(corrected, block_size=block_size, key=key,
-                               impl=impl, interpret=interpret)
+    # ONE fused quantize over the whole concatenated bucket stack.
+    # The (nb, p, shard) layout flattens in stream order, so the
+    # all-padding tail blocks (past ``total``) form a suffix of the
+    # block rows — skip the kernel over them and emit constant-zero
+    # payload (dequantizes to exactly 0.0, same as quantizing zeros).
+    n_rows = nb * p * ns
+    d_rows = (n_rows if total is None
+              else max(1, min(n_rows, -(-total // block_size))))
+    if d_rows < n_rows:
+        q_d, s_d = q_ops.quantize_int8(
+            corrected.reshape(n_rows, block_size)[:d_rows],
+            block_size=block_size, key=key, impl=impl,
+            interpret=interpret)
+        q = jnp.concatenate(
+            [q_d, jnp.zeros((n_rows - d_rows, block_size), jnp.int8)])
+        s = jnp.concatenate([s_d, jnp.zeros((n_rows - d_rows,),
+                                            jnp.float32)])
+    else:
+        q, s = q_ops.quantize_int8(corrected, block_size=block_size,
+                                   key=key, impl=impl,
+                                   interpret=interpret)
     # q: (nb*p*ns, block), s: (nb*p*ns,)
     if want_err:
         deq_local = (q.astype(jnp.float32) *
                      s[:, None]).reshape(nb, p, shard)
         new_err = corrected - deq_local      # stage-1 residual, all shards
+        if d_rows < n_rows:
+            # the all-padding tail carries no signal: pin its error
+            # slots to zero (they are zero on every reachable state —
+            # init is zero and zero grads leave zero residual — this
+            # just refuses to carry garbage from a corrupted restore).
+            # The untrimmed per-bucket pipeline preserves a zero tail
+            # too, so both schedules agree bitwise on reachable states.
+            ner = new_err.reshape(n_rows, block_size)
+            new_err = jnp.concatenate(
+                [ner[:d_rows],
+                 jnp.zeros((n_rows - d_rows, block_size), jnp.float32)]
+            ).reshape(nb, p, shard)
 
     payload = compression.fuse_payload(
         q.reshape(nb, p, ns, block_size), s.reshape(nb, p, ns))
@@ -262,6 +362,267 @@ def exchange_buckets(
 
 
 # --------------------------------------------------------------------------
+# the overlapped (double-buffered per-bucket) exchange pipeline
+# --------------------------------------------------------------------------
+
+
+def prepare_bucket(
+    x_k: jnp.ndarray,
+    err_k: Optional[jnp.ndarray],
+    *,
+    compress: bool,
+    block_size: int,
+    key: Optional[jax.Array],
+    impl: str,
+    interpret: bool,
+) -> Tuple[Any, Optional[jnp.ndarray]]:
+    """Send-side leg for ONE bucket: error-correct + quantize + fuse.
+
+    ``x_k``: (p, shard) — bucket *k* reshaped rank-major. Returns the
+    wire-ready payload plus the stage-1 residual (compressed mode with
+    error feedback). This is the pipeline stage that runs for bucket
+    *k+1* while bucket *k*'s exchange is in flight.
+    """
+    if not compress:
+        return x_k, None
+    p, shard = x_k.shape
+    ns = shard // block_size
+    corrected = x_k + (err_k if err_k is not None else 0.0)
+    q, s = q_ops.quantize_int8(corrected, block_size=block_size, key=key,
+                               impl=impl, interpret=interpret)
+    resid1 = None
+    if err_k is not None:
+        deq_local = (q.astype(jnp.float32) * s[:, None]).reshape(p, shard)
+        resid1 = corrected - deq_local
+    payload = compression.fuse_payload(
+        q.reshape(p, ns, block_size), s.reshape(p, ns))  # (p, ns, B+4)
+    return payload, resid1
+
+
+def exchange_prepared_bucket(
+    payload: Any,
+    resid1: Optional[jnp.ndarray],
+    *,
+    axis: compat.AxisNames,
+    axis_size: int,
+    compress: bool,
+    block_size: int,
+    impl: str,
+    interpret: bool,
+    onehot: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Link + receive-side legs for ONE prepared bucket.
+
+    Returns the globally summed (bucket_elems,) bucket and its new
+    error slice (p, shard). Mirrors ``exchange_buckets`` exactly on a
+    single bucket, so per-bucket results are bitwise identical to the
+    corresponding slice of the monolithic exchange, given ``key=None``
+    and a zero error tail in the padding region (true on every
+    reachable state: the tail starts zero, zero grads leave zero
+    residual, and the monolithic trim pins it to zero — only the
+    per-bucket pipeline cannot skip tail blocks, since its scan body
+    must stay uniform across buckets).
+    """
+    p = axis_size
+    if not compress:
+        sh = jax.lax.psum_scatter(payload, axis, scatter_dimension=0,
+                                  tiled=False)             # (shard,)
+        full = compat.manual_all_gather(sh, axis, p, onehot)
+        return full.reshape(-1), None
+
+    ns = payload.shape[1]
+    rx = compat.manual_all_to_all(payload, axis, p, onehot)
+    q_x, s_x = compression.split_payload(rx, block_size)
+    shard_sum = q_ops.dequant_accum(
+        q_x.reshape(p, ns, block_size), s_x.reshape(p, ns),
+        impl=impl, interpret=interpret)                    # (ns, B)
+    q2, s2 = q_ops.quantize_int8(shard_sum, block_size=block_size,
+                                 key=None, impl=impl, interpret=interpret)
+    new_err = None
+    if resid1 is not None:
+        deq2 = (q2.astype(jnp.float32) * s2[:, None]).reshape(-1)
+        resid2 = shard_sum.reshape(-1) - deq2              # (shard,)
+        new_err = resid1 + resid2[None, :] * onehot[:, None]
+    payload2 = compression.fuse_payload(
+        q2.reshape(ns, block_size), s2)
+    g2 = compat.manual_all_gather(payload2, axis, p, onehot)
+    qg, sg = compression.split_payload(g2, block_size)
+    full = qg.astype(jnp.float32) * sg[..., None]          # (p, ns, B)
+    return full.reshape(-1), new_err
+
+
+def run_overlapped_pipeline(
+    num_buckets: int,
+    prep,
+    exchange,
+    *,
+    raw: jnp.ndarray,
+    err: Optional[jnp.ndarray] = None,
+    bucket_fn=None,
+    fn_carry: Any = None,
+    bucket_xs: Any = None,
+) -> Tuple[Any, Optional[jnp.ndarray], Any]:
+    """THE double-buffered per-bucket pipeline driver (shared by the
+    flat and 3-level hierarchical schedules).
+
+    ``prep(k, raw_k, err_k)`` builds bucket *k*'s wire-ready state from
+    ``raw[k]`` / ``err[k]``; ``exchange(prepared)`` runs its collective
+    leg(s) and returns ``(reduced_k, new_err_k | None)``. Iteration *k*
+    calls ``prep`` for bucket *k+1* before exchanging bucket *k* — the
+    prepared state in the carry is the double buffer — and hands each
+    reduced bucket to ``bucket_fn(carry, reduced_k, xs_k, k)`` the
+    moment it lands (default: passthrough). The last bucket exchanges
+    in an epilogue so no dead prepare is ever issued.
+
+    On current jax the steady state is a ``lax.scan``; the old-jaxlib
+    SPMD partitioner check-fails on collectives inside a scan in a
+    partially-manual region, so the compat path unrolls the identical
+    body in python (same dependency structure, nb-times-larger HLO).
+
+    Returns (stacked bucket_fn outputs, stacked new error slices or
+    None, final bucket_fn carry).
+    """
+    nb = num_buckets
+    want_err = err is not None
+    if bucket_fn is None:
+        bucket_fn = lambda carry, red, xs_k, k: (carry, red)  # noqa: E731
+
+    def exch_one(prepared, fc, bx_k, k):
+        red_k, nerr_k = exchange(prepared)
+        fc, out_k = bucket_fn(fc, red_k, bx_k, k)
+        if nerr_k is None:
+            nerr_k = jnp.zeros((), jnp.float32)     # uniform scan output
+        return fc, out_k, nerr_k
+
+    def body(carry, xs_k):
+        (prepared, fc), (k, raw_next, err_next, bx_k) = carry, xs_k
+        # double buffer: bucket k+1's send-side leg is issued while
+        # bucket k's exchange is (logically) in flight — it depends
+        # only on the raw bucket, never on bucket k's landing
+        nxt = prep(k + 1, raw_next, err_next)
+        fc, out_k, nerr_k = exch_one(prepared, fc, bx_k, k)
+        return (nxt, fc), (out_k, nerr_k)
+
+    def bx_at(k):
+        return (jax.tree.map(lambda a: a[k], bucket_xs)
+                if bucket_xs is not None else None)
+
+    carry = (prep(0, raw[0], err[0] if want_err else None), fn_carry)
+    outs_h = nerrs_h = None
+    if nb > 1 and compat.NATIVE_MANUAL_COLLECTIVES:
+        xs = (jnp.arange(nb - 1), raw[1:],
+              err[1:] if want_err else jnp.zeros((nb - 1,), jnp.float32),
+              jax.tree.map(lambda a: a[:nb - 1], bucket_xs)
+              if bucket_xs is not None
+              else jnp.zeros((nb - 1,), jnp.float32))
+        carry, (outs_h, nerrs_h) = jax.lax.scan(
+            lambda c, s: body(c, (s[0], s[1],
+                                  s[2] if want_err else None,
+                                  s[3] if bucket_xs is not None else None)),
+            carry, xs)
+    elif nb > 1:
+        head_list = []
+        for k in range(nb - 1):
+            carry, head_k = body(
+                carry, (k, raw[k + 1],
+                        err[k + 1] if want_err else None, bx_at(k)))
+            head_list.append(head_k)
+        outs_h, nerrs_h = jax.tree.map(lambda *ls: jnp.stack(ls),
+                                       *head_list)
+    prepared, fc = carry
+    fc, out_last, nerr_last = exch_one(prepared, fc, bx_at(nb - 1),
+                                       nb - 1)
+    if outs_h is None:
+        outs = jax.tree.map(lambda l: l[None], out_last)
+        nerrs = nerr_last[None]
+    else:
+        outs = jax.tree.map(lambda h, l: jnp.concatenate([h, l[None]]),
+                            outs_h, out_last)
+        nerrs = jnp.concatenate([nerrs_h, nerr_last[None]])
+    return outs, (nerrs if want_err else None), fc
+
+
+def exchange_buckets_overlapped(
+    buckets: jnp.ndarray,
+    err: Optional[jnp.ndarray] = None,
+    *,
+    axis: compat.AxisNames,
+    axis_size: int,
+    compress: bool = False,
+    block_size: int = 256,
+    key: Optional[jax.Array] = None,
+    impl: str = "reference",
+    interpret: bool = False,
+    bucket_fn=None,
+    fn_carry: Any = None,
+    bucket_xs: Any = None,
+) -> Tuple[Any, Optional[jnp.ndarray], Any]:
+    """Double-buffered per-bucket reduction pipeline, fused hook.
+
+    Same contract as :func:`exchange_buckets`, restructured as a scan
+    over buckets with software pipelining: iteration *k* exchanges the
+    payload prepared during iteration *k-1* (so bucket *k+1*'s
+    quantize/pack overlaps bucket *k*'s in-flight collective — the
+    double buffer is the scan carry) and hands bucket *k*'s reduced
+    payload to ``bucket_fn`` the moment it lands.
+
+    ``bucket_fn(carry, reduced_k, xs_k, k) -> (carry, out_k)`` is the
+    fusion hook — the train step applies the per-bucket flat-view
+    optimizer update here (optim/adam.py::apply_update_flat), with the
+    packed param/moment bucket slices arriving via ``bucket_xs`` (a
+    pytree whose leaves have leading dim num_buckets). The default hook
+    passes the reduced bucket through, so the result is the reduced
+    (num_buckets, bucket_elems) stack.
+
+    Per-step stochastic-rounding keys are decorrelated per bucket via
+    ``fold_in(key, k)`` (so int8 results with a key differ from the
+    monolithic single-fold schedule; with ``key=None`` both schedules
+    quantize identical blocks and agree bitwise).
+
+    Returns ``(stacked bucket_fn outputs, new error state, final
+    bucket_fn carry)``. Costs 2 collectives per bucket (the price of
+    overlap) vs 2 total for the monolithic schedule.
+    """
+    nb, be = buckets.shape
+    p = axis_size
+    if be % p:
+        raise ValueError(f"bucket_elems {be} not divisible by axis size "
+                         f"{p}; build the layout with multiple_of={p}")
+    shard = be // p
+    if compress and shard % block_size:
+        raise ValueError(
+            f"shard {shard} not divisible by block_size {block_size}; "
+            f"build the layout with multiple_of={p * block_size}")
+    x = buckets.reshape(nb, p, shard)
+    want_err = compress and err is not None
+    e = err.reshape(nb, p, shard) if want_err else None
+    onehot = compat.manual_axis_onehot(axis, p, tie=buckets)
+
+    def prep(k, raw_k, err_k):
+        bkey = (jax.random.fold_in(key, k) if (compress and key is not None)
+                else None)
+        if compress and bkey is not None:
+            bkey = jax.random.fold_in(
+                bkey, jnp.argmax(onehot).astype(jnp.int32))
+        return prepare_bucket(raw_k, err_k, compress=compress,
+                              block_size=block_size, key=bkey, impl=impl,
+                              interpret=interpret)
+
+    def exchange(prepared):
+        payload, resid1 = prepared
+        return exchange_prepared_bucket(
+            payload, resid1, axis=axis, axis_size=p, compress=compress,
+            block_size=block_size, impl=impl, interpret=interpret,
+            onehot=onehot)
+
+    outs, nerrs, fc = run_overlapped_pipeline(
+        nb, prep, exchange, raw=x, err=e, bucket_fn=bucket_fn,
+        fn_carry=fn_carry, bucket_xs=bucket_xs)
+    new_err = nerrs.reshape(nb, be) if want_err else None
+    return outs, new_err, fc
+
+
+# --------------------------------------------------------------------------
 # analytic link-byte model (for §Roofline and the reduction benchmark)
 # --------------------------------------------------------------------------
 
@@ -274,19 +635,42 @@ def modeled_link_bytes(layout: BucketLayout, ranks: int, *,
     Uncompressed: reduce-scatter + all-gather each move (p-1)/p of the
     padded buffer per rank. Compressed: the all_to_all sends (p-1)/p of
     the fused int8 payload, the all-gather broadcast leg forwards
-    (p-1) shard payloads. This models the *native* schedule; the
-    psum-based CPU emulation in compat.py moves more bytes but issues
-    the same number of collectives.
+    (p-1) shard payloads; only DATA blocks count — the all-padding
+    tail blocks of the last bucket are constant zeros that a native
+    ragged exchange never transmits (and ``exchange_buckets`` skips
+    quantizing), so bucketed int8 never models more bytes than the
+    per-leaf int8 walk (sum of per-leaf block counts >= the stream's
+    block count). This models the *native* schedule; the psum-based
+    CPU emulation in compat.py moves more bytes but issues the same
+    number of collectives.
     """
     p = ranks
     n = layout.padded_total
     if not compress:
         return int(2 * (p - 1) / p * n * 4)
-    blocks = n // block_size
-    payload = n + blocks * 4                   # int8 values + fused scales
+    blocks = -(-layout.total // block_size)    # data blocks only
+    payload = blocks * (block_size + 4)        # int8 values + fused scales
     a2a = (p - 1) / p * payload
     ag = (p - 1) / p * payload                 # p shard payloads, ring leg
     return int(a2a + ag)
+
+
+def modeled_bucket_link_bytes(layout: BucketLayout, ranks: int, k: int, *,
+                              compress: bool = False,
+                              block_size: int = 256) -> int:
+    """Per-rank link bytes for bucket ``k`` of the per-bucket pipeline.
+
+    Same model as :func:`modeled_link_bytes` applied to one bucket;
+    summed over buckets it reproduces the monolithic total (the
+    pipeline moves the same bytes, just in nb back-to-back messages).
+    """
+    p = ranks
+    if not compress:
+        return int(2 * (p - 1) / p * layout.bucket_elems * 4)
+    start = k * layout.bucket_elems
+    data = max(0, min(layout.total - start, layout.bucket_elems))
+    blocks = -(-data // block_size)
+    return int(2 * (p - 1) / p * blocks * (block_size + 4))
 
 
 def modeled_per_leaf_bytes(tree: Any, ranks: int, *,

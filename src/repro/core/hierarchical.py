@@ -26,10 +26,22 @@ Two granularities:
     the reduce-scatter over "data" runs before the pack-side quantize,
     so only 1/data_size of the buffer exists per rank when the DCN leg
     fires.
+  * ``hierarchical_reduce_bucketed_overlapped`` — the same 3-level
+    schedule as a double-buffered per-bucket pipeline: bucket k+1's
+    in-pod reduce-scatter + quantize run while bucket k's DCN exchange
+    is in flight (2 DCN collectives per bucket instead of 2 total —
+    the latency/overlap trade benchmarks/overlap_bench.py models).
 
-This module provides the *manual-collective* building blocks; the train
-step (launch/steps.py) wires them behind ``HetConfig.grad_reduction``
-and ``HetConfig.bucket_mb``.
+This module provides the *manual-collective* building blocks for the
+fully-manual ({pod, data}) mesh regions used by the distributed tests
+and benchmarks. The train step (launch/steps.py) runs a partially-
+manual variant of the same schedule: manual over "pod" only, with the
+in-pod legs left to XLA's automatic ("data"-FSDP) partitioning — its
+``HetConfig.overlap`` path therefore pipelines the flat engine
+(core/buckets.py) over the pod axis rather than calling the 3-level
+functions here (wiring the fully-manual 3-level pipeline into the step
+is an open ROADMAP item: grad-of-scan cannot lower inside partially-
+manual regions on the compat jaxlib).
 """
 from __future__ import annotations
 
@@ -174,6 +186,85 @@ def hierarchical_reduce_bucketed(
     full = compat.manual_all_gather(red, data_axis, data_size)
     flat = jnp.moveaxis(full, 0, 1).reshape(nb, be)
     return bkt.unpack_buckets(flat, layout), new_err
+
+
+def hierarchical_reduce_bucketed_overlapped(
+    grads: Any,
+    err: Optional[jnp.ndarray],
+    layout: bkt.BucketLayout,
+    *,
+    data_axis: str = "data",
+    pod_axis: str = "pod",
+    data_size: int,
+    pod_size: int,
+    compress: bool = False,
+    block_size: int = 256,
+    key: Optional[jax.Array] = None,
+    impl: str = "reference",
+) -> Tuple[Any, Optional[jnp.ndarray]]:
+    """Double-buffered 3-level pipeline, inside shard_map(manual={pod,
+    data}).
+
+    Per-bucket version of :func:`hierarchical_reduce_bucketed`: while
+    bucket *k*'s cross-pod (DCN) exchange is in flight, bucket *k+1*
+    runs its in-pod reduce-scatter + send-side quantize — the ICI legs
+    and the quantize kernels hide behind the slow link exactly like the
+    flat pipeline in core/buckets.py (whose per-bucket building blocks
+    this reuses). ``err`` is this rank's flat
+    (num_buckets, bucket_elems / data_size) slice.
+    """
+    flat = bkt.pack_buckets(grads, layout)              # (nb, be)
+    nb, be = flat.shape
+    if be % data_size:
+        raise ValueError(
+            f"bucket_elems {be} not divisible by data_size {data_size}")
+    shard = be // data_size
+    if shard % pod_size:
+        raise ValueError(
+            f"in-pod shard {shard} not divisible by pod_size {pod_size}")
+    if compress and (shard // pod_size) % block_size:
+        raise ValueError(
+            f"per-pod shard {shard // pod_size} not divisible by "
+            f"block_size {block_size}; build the layout with "
+            f"multiple_of={data_size * pod_size * block_size}")
+    want_err = compress and err is not None
+    e = err.reshape(nb, pod_size, shard // pod_size) if want_err else None
+    onehot = compat.manual_axis_onehot(pod_axis, pod_size, tie=flat)
+
+    def prep(k, raw_k, err_k):
+        # in-pod reduce-scatter (ICI) for bucket k, then the cross-pod
+        # send-side leg — both overlap bucket k-1's DCN exchange
+        sh = jax.lax.psum_scatter(
+            raw_k.reshape(data_size, shard), data_axis,
+            scatter_dimension=0, tiled=False)           # (shard,)
+        bkey = key
+        if compress and bkey is not None:
+            bkey = jax.random.fold_in(bkey, k)
+            bkey = jax.random.fold_in(
+                bkey, jnp.argmax(onehot).astype(jnp.int32))
+        return bkt.prepare_bucket(
+            sh.reshape(pod_size, shard // pod_size), err_k,
+            compress=compress, block_size=block_size, key=bkey,
+            impl=impl, interpret=False)
+
+    def exchange(prepared):
+        payload, resid1 = prepared
+        red_k, nerr_k = bkt.exchange_prepared_bucket(
+            payload, resid1, axis=pod_axis, axis_size=pod_size,
+            compress=compress, block_size=block_size, impl=impl,
+            interpret=False, onehot=onehot)             # (shard,)
+        # in-pod all-gather (ICI) rebuilds bucket k as it lands
+        full = compat.manual_all_gather(red_k, data_axis, data_size)
+        return full.reshape(be), nerr_k
+
+    # shared driver: bucket k+1's ICI reduce-scatter + quantize (prep)
+    # overlap bucket k's in-flight DCN exchange; the last bucket runs
+    # in an epilogue so the prep's ICI reduce-scatter is never issued
+    # for a dead (wrapped-around) bucket
+    outs, nerrs, _ = bkt.run_overlapped_pipeline(
+        nb, prep, exchange, raw=flat, err=e)
+    new_err = nerrs.reshape(nb, shard) if want_err else None
+    return bkt.unpack_buckets(outs, layout), new_err
 
 
 def cross_pod_bytes(grads: Any, num_params_bytes: int = 4,

@@ -24,6 +24,18 @@
          one gather per leaf) is kept for comparison;
   4. AdamW update (optimizer state sharded like params = ZeRO-1).
 
+``HetConfig.overlap="buckets"`` (both explicit reduction modes)
+replaces steps 3+4 with the fused double-buffered pipeline: the
+per-bucket exchange (core/buckets.py::exchange_buckets_overlapped)
+overlaps bucket k+1's quantize/pack with bucket k's in-flight
+collective, and the flat-view optimizer update
+(optim/adam.py::apply_update_flat) for bucket k is applied the moment
+its reduced payload lands — the optimizer moments then live packed as
+one (num_buckets, bucket_elems) array in TrainState, replicated over
+the reduction axes. Global-norm clipping / LAMB keep the pipelined
+exchange but update behind a barrier (their statistics need every
+bucket).
+
 ``input_specs`` provides ShapeDtypeStruct stand-ins for every cell of
 the (architecture x shape) grid — the dry-run lowers against these, no
 allocation ever happens.
@@ -71,6 +83,9 @@ class TrainState(NamedTuple):
     err: Any                       # error-feedback state or () when unused
     # bucketed reduction: ONE flat (pods, num_buckets, bucket_elems) f32
     # array; legacy per-leaf reduction: a (pods, *leaf) pytree mirror
+    # overlap="buckets": opt.m / opt.v are packed
+    # (num_buckets, bucket_elems) arrays (core/buckets.py layout),
+    # replicated over the reduction axes, NOT pytree mirrors
 
 
 def _err_enabled(tcfg: TrainConfig, mesh: Mesh) -> bool:
@@ -78,6 +93,31 @@ def _err_enabled(tcfg: TrainConfig, mesh: Mesh) -> bool:
             and tcfg.het.compression != "none"
             and tcfg.het.error_feedback
             and "pod" in mesh.axis_names)
+
+
+def _overlap_enabled(tcfg: TrainConfig, mesh: Mesh) -> bool:
+    """Whether this config runs the fused per-bucket pipeline.
+
+    Overlap is a schedule of the bucketed engine, so it needs an
+    explicit reduction mode with a bucket layout to pipeline over.
+    """
+    if tcfg.het.overlap == "none":
+        return False
+    if tcfg.het.overlap != "buckets":
+        raise ValueError(f"unknown HetConfig.overlap "
+                         f"'{tcfg.het.overlap}' (none | buckets)")
+    if tcfg.het.grad_reduction not in ("bucketed_allreduce",
+                                       "hierarchical"):
+        raise ValueError(
+            "HetConfig.overlap='buckets' needs an explicit reduction "
+            f"(bucketed_allreduce | hierarchical), not "
+            f"'{tcfg.het.grad_reduction}'")
+    if tcfg.het.bucket_mb <= 0:
+        raise ValueError(
+            "HetConfig.overlap='buckets' needs bucket_mb > 0")
+    if not _reduce_axes(tcfg, mesh):
+        return False               # no reduction axes on this mesh
+    return True
 
 
 def _reduce_axes(tcfg: TrainConfig, mesh: Mesh) -> Tuple[str, ...]:
@@ -109,8 +149,18 @@ def bucket_layout(model: Model, tcfg: TrainConfig,
 
 def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh):
     params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
-    opt_shape = jax.eval_shape(
-        functools.partial(adam.init_state, cfg=tcfg.optimizer), params_shape)
+    if _overlap_enabled(tcfg, mesh):
+        # fused per-bucket pipeline: moments live packed in the flat
+        # bucket layout (NOTE: layout depends on the mesh's reduction
+        # ranks — re-meshing an overlap checkpoint needs a repack)
+        lo = bucket_layout(model, tcfg, mesh)
+        opt_shape = jax.eval_shape(functools.partial(
+            adam.init_state_flat, lo.num_buckets, lo.bucket_elems,
+            tcfg.optimizer))
+    else:
+        opt_shape = jax.eval_shape(
+            functools.partial(adam.init_state, cfg=tcfg.optimizer),
+            params_shape)
     if _err_enabled(tcfg, mesh):
         pods = mesh.shape["pod"]
         layout = bucket_layout(model, tcfg, mesh)
@@ -161,7 +211,13 @@ def state_specs(model: Model, tcfg: TrainConfig, mesh: Mesh) -> TrainState:
             vshape = shapes.params["embed"].shape
             pspecs = dict(pspecs)
             pspecs["embed"] = shr.fit_spec(vshape, P(None, tp), mesh)
-    ospecs = adam.AdamState(step=P(), m=pspecs, v=pspecs)
+    if _overlap_enabled(tcfg, mesh):
+        # packed moments: replicated over the reduction axes (the flat
+        # stack mixes every leaf's sharding — the ZeRO-1 mirror does
+        # not apply; documented trade in ROADMAP.md)
+        ospecs = adam.AdamState(step=P(), m=P(), v=P())
+    else:
+        ospecs = adam.AdamState(step=P(), m=pspecs, v=pspecs)
     if shapes.err == ():
         especs: Any = ()
     elif isinstance(shapes.err, jax.ShapeDtypeStruct):
@@ -181,7 +237,12 @@ def init_train_state(model: Model, tcfg: TrainConfig, mesh: Mesh,
 
     def init(k):
         params = model.init_params(k)
-        opt = adam.init_state(params, tcfg.optimizer)
+        if _overlap_enabled(tcfg, mesh):
+            lo = bucket_layout(model, tcfg, mesh)
+            opt = adam.init_state_flat(lo.num_buckets, lo.bucket_elems,
+                                       tcfg.optimizer)
+        else:
+            opt = adam.init_state(params, tcfg.optimizer)
         if shapes.err == ():
             err: Any = ()
         else:
@@ -293,29 +354,36 @@ def _cross_pod_reduce(grads: Any, err: Any, compress: str, pods: int,
             treedef.unflatten([p[1] for p in pairs]))
 
 
-def _cross_pod_reduce_bucketed(
+def _reduce_bucketed(
     grads: Any,
     err: Any,
+    *,
+    axis,
+    axis_size: int,
     compress: str,
-    pods: int,
     layout: bkt.BucketLayout,
     impl: str = "reference",
     block_size: int = _BLOCK,
 ) -> Tuple[Any, Any]:
-    """Bucketed cross-pod reduction, inside shard_map(manual={"pod"}).
+    """THE bucketed-reduction entry point, inside shard_map(manual).
 
+    Shared by both explicit modes — ``axis="pod"`` for the cross-pod
+    leg of "hierarchical", ``axis=<dp axes>`` for "bucketed_allreduce".
     Packs the whole gradient pytree into the fixed-size bucket stack,
-    runs ONE fused quantize + ONE payload exchange + ONE gather for the
-    entire tree (core/buckets.py), and unpacks. ``err`` is this pod's
-    (1, num_buckets, bucket_elems) slice of the flat error state, or
-    None when error feedback is off.
+    runs the monolithic two-collective exchange, and unpacks. ``err``
+    is this rank's (1, num_buckets, bucket_elems) slice of the flat
+    error state, or None when error feedback is off. The overlap mode
+    does NOT go through here — its fused reduce+optimizer pipeline
+    never materializes the unpacked gradient tree (see
+    build_train_step's overlap branch).
     """
     flat = bkt.pack_buckets(grads, layout)
     e = (err.reshape(layout.num_buckets, layout.bucket_elems)
          if err is not None else None)
     red, new_e = bkt.exchange_buckets(
-        flat, e, axis="pod", axis_size=pods,
-        compress=(compress != "none"), block_size=block_size, impl=impl)
+        flat, e, axis=axis, axis_size=axis_size,
+        compress=(compress != "none"), block_size=block_size,
+        impl=impl, total=layout.total)
     out = bkt.unpack_buckets(red, layout)
     if new_e is None:
         return out, None
@@ -353,6 +421,16 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
     n_dp = dp_size(mesh)
     dp = mesh_dp_axes(mesh)
     n_pods = mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+    overlap = _overlap_enabled(tcfg, mesh)
+    if overlap and layout is None:
+        raise ValueError("HetConfig.overlap='buckets' needs a bucket "
+                         "layout (bucket_mb > 0 and reduction axes)")
+    # the fused per-bucket pipeline can stream the AdamW update as each
+    # bucket lands; global-norm clipping and LAMB's per-layer trust
+    # ratios need every bucket first, so those keep the pipelined
+    # exchange but update behind a barrier
+    fused_stream = (overlap and ocfg.grad_clip <= 0
+                    and ocfg.name != "lamb")
 
     # inside a manual region the manual axes must not appear in sharding
     # constraints — hierarchical keeps "data" automatic inside the pod
@@ -393,9 +471,10 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
     def apply_pod_reduce(g, err):
         """The cross-pod leg: bucketed engine or legacy per-leaf walk."""
         if layout is not None:
-            g, ne = _cross_pod_reduce_bucketed(
-                g, err if use_err else None, compress, n_pods,
-                layout, impl=q_impl)
+            g, ne = _reduce_bucketed(
+                g, err if use_err else None, axis="pod",
+                axis_size=n_pods, compress=compress, layout=layout,
+                impl=q_impl)
             return g, (ne if ne is not None else ())
         return _cross_pod_reduce(g, err, compress, n_pods)
 
@@ -416,7 +495,157 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
         g, o, w = jax.vmap(compute_grads, in_axes=(None, 0))(params, sb)
         return g, jnp.sum(o), jnp.sum(w)
 
+    # ---- fused overlap step (HetConfig.overlap="buckets") ---------------
+    # The optimizer moves INSIDE the manual region: the per-bucket
+    # pipeline exchanges bucket k while bucket k+1 quantizes, and the
+    # flat-view AdamW update for bucket k runs the moment it lands.
+    # The packed moments enter/leave the region replicated over the
+    # reduction axes; every rank computes the identical update.
+    if overlap:
+        dmask = bkt.decay_mask(layout)
+        segs = bkt.segment_ids(layout) if ocfg.name == "lamb" else None
+        n_leaves = len(layout.sizes)
+        red_axis: Any = "pod" if hier else (dp if len(dp) > 1 else dp[0])
+        red_size = n_pods if hier else n_dp
+
+        def fused_reduce_update(g, params, m, v, e, w_sum, lr_step, lr):
+            """Inside shard_map(manual over the reduction axes).
+
+            ``g``: this rank's unreduced grad tree; ``e``: this rank's
+            (nb, be) error slice or None; ``w_sum``: the GLOBAL weight
+            sum. Returns (params', m', v', err'(nb, be) | None, gnorm,
+            mean trust ratio — 1.0 for AdamW).
+            """
+            gb = bkt.pack_buckets(g, layout)
+            pb = bkt.pack_buckets(params, layout)
+            inv_w = 1.0 / jnp.maximum(w_sum, 1e-9)
+            kwargs = dict(axis=red_axis, axis_size=red_size,
+                          compress=(compress != "none"),
+                          block_size=_BLOCK, impl=q_impl)
+            if fused_stream:
+                def hook(ssq, red_k, xs_k, k):
+                    p_k, m_k, v_k, dm_k = xs_k
+                    g_k = red_k * inv_w
+                    out = adam.apply_update_flat(
+                        p_k, g_k, m_k, v_k, lr_step, ocfg, lr,
+                        decay_mask=dm_k)
+                    return ssq + jnp.sum(g_k * g_k), out
+
+                outs, new_e, ssq = bkt.exchange_buckets_overlapped(
+                    gb, e, bucket_fn=hook,
+                    fn_carry=jnp.zeros((), jnp.float32),
+                    bucket_xs=(pb, m, v, dmask), **kwargs)
+                new_pb, new_m, new_v = outs
+                gnorm = jnp.sqrt(ssq)
+                trust = jnp.ones((), jnp.float32)
+            else:
+                red, new_e, _ = bkt.exchange_buckets_overlapped(
+                    gb, e, **kwargs)
+                gsc = red * inv_w
+                gnorm = jnp.sqrt(jnp.sum(gsc * gsc))
+                cs = (jnp.minimum(1.0, ocfg.grad_clip /
+                                  jnp.maximum(gnorm, 1e-9))
+                      if ocfg.grad_clip > 0 else None)
+                if ocfg.name == "lamb":
+                    new_pb, new_m, new_v, trust = lamb.apply_update_flat(
+                        pb, gsc, m, v, lr_step, ocfg, lr,
+                        decay_mask=dmask, seg_ids=segs,
+                        num_leaves=n_leaves, clip_scale=cs)
+                else:
+                    new_pb, new_m, new_v = adam.apply_update_flat(
+                        pb, gsc, m, v, lr_step, ocfg, lr,
+                        decay_mask=dmask, clip_scale=cs)
+                    trust = jnp.ones((), jnp.float32)
+            return (bkt.unpack_buckets(new_pb, layout), new_m, new_v,
+                    new_e, gnorm, trust)
+
+        def overlap_step(state: TrainState, batch: Dict
+                         ) -> Tuple[TrainState, Dict]:
+            lr_step = state.opt.step + 1
+            lr = schedules.learning_rate(ocfg, lr_step)
+            err_in = state.err if use_err else ()
+            err_spec = P("pod") if use_err else P()
+            axes = {"pod"} if hier else set(dp)
+            batch_spec = P("pod") if hier else P(dp)
+
+            def unslice_err(err):
+                return (err.reshape(layout.num_buckets,
+                                    layout.bucket_elems)
+                        if use_err else None)
+
+            def reslice_err(new_e, err):
+                return (new_e.reshape(1, layout.num_buckets,
+                                      layout.bucket_elems)
+                        if use_err else err)
+
+            if compat.NATIVE_MANUAL_COLLECTIVES:
+                pspecs_in = state_specs(model, tcfg, mesh).params
+
+                def local(params, b, err, m, v, step_no, lr_in):
+                    g, o, w = compute_grads(params, b)
+                    if hier:
+                        # re-pin lost (data, model) layouts (see the
+                        # hierarchical branch below)
+                        g = jax.tree.map(
+                            lambda gr, s:
+                            jax.lax.with_sharding_constraint(gr, s),
+                            g, pspecs_in)
+                    o = jax.lax.psum(o, red_axis)
+                    w = jax.lax.psum(w, red_axis)
+                    np_, nm, nv, ne, gn, tr = fused_reduce_update(
+                        g, params, m, v, unslice_err(err), w,
+                        step_no, lr_in)
+                    return (np_, nm, nv, reslice_err(ne, err), o, w,
+                            gn, tr)
+
+                (new_params, new_m, new_v, new_err, o, w, gnorm,
+                 trust) = compat.shard_map(
+                    local, mesh=mesh,
+                    in_specs=(P(), batch_spec, err_spec, P(), P(),
+                              P(), P()),
+                    out_specs=(P(), P(), P(), err_spec, P(), P(),
+                               P(), P()),
+                    axis_names=axes, check_vma=False,
+                )(state.params, batch, err_in, state.opt.m,
+                  state.opt.v, lr_step, lr)
+            else:
+                ranks = n_pods if hier else n_dp
+                rank_spec = P("pod", "data") if hier else P(dp)
+                g, o, w = vmapped_rank_grads(state.params, batch, ranks,
+                                             rank_spec)
+
+                def reduce_update(gl, err, params, m, v, w_sum,
+                                  step_no, lr_in):
+                    gg = jax.tree.map(lambda a: a[0], gl)
+                    np_, nm, nv, ne, gn, tr = fused_reduce_update(
+                        gg, params, m, v, unslice_err(err), w_sum,
+                        step_no, lr_in)
+                    return np_, nm, nv, reslice_err(ne, err), gn, tr
+
+                (new_params, new_m, new_v, new_err, gnorm, trust) = \
+                    compat.shard_map(
+                        reduce_update, mesh=mesh,
+                        in_specs=(P("pod") if hier else P(dp), err_spec,
+                                  P(), P(), P(), P(), P(), P()),
+                        out_specs=(P(), P(), P(), err_spec, P(), P()),
+                        axis_names=axes, check_vma=False,
+                    )(g, err_in, state.params, state.opt.m,
+                      state.opt.v, w, lr_step, lr)
+
+            loss = weighting.finalize(o, w)
+            metrics = {"loss": loss, "weight": w, "grad_norm": gnorm,
+                       "lr": lr}
+            if ocfg.name == "lamb":
+                metrics["trust_ratio"] = trust
+            new_state = TrainState(
+                params=new_params,
+                opt=adam.AdamState(step=lr_step, m=new_m, v=new_v),
+                err=new_err if use_err else state.err)
+            return new_state, metrics
+
     def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if overlap:
+            return overlap_step(state, batch)
         if hier:
             if compat.NATIVE_MANUAL_COLLECTIVES:
                 pspecs_in = state_specs(model, tcfg, mesh).params
@@ -462,10 +691,11 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
             axis = dp if len(dp) > 1 else dp[0]
 
             def reduce_buckets(g):
-                flat = bkt.pack_buckets(g, layout)
-                red, _ = bkt.exchange_buckets(flat, None, axis=axis,
-                                              axis_size=n_dp)
-                return bkt.unpack_buckets(red, layout)
+                out, _ = _reduce_bucketed(g, None, axis=axis,
+                                          axis_size=n_dp,
+                                          compress="none", layout=layout,
+                                          impl=q_impl)
+                return out
 
             if compat.NATIVE_MANUAL_COLLECTIVES:
                 def dp_local(params, b):

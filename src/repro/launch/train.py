@@ -66,6 +66,7 @@ def build_everything(args):
             grad_reduction=args.grad_reduction,
             compression=args.compression,
             bucket_mb=args.bucket_mb,
+            overlap=args.overlap,
             accum_steps=args.accum),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   warmup_steps=args.warmup,
@@ -189,6 +190,12 @@ def main():
     ap.add_argument("--bucket-mb", type=float, default=0.0,
                     help="bucketed flat-buffer reduction: bucket payload"
                          " in MiB of f32 (0 = legacy per-leaf walk)")
+    ap.add_argument("--overlap", default="none",
+                    choices=["none", "buckets"],
+                    help="'buckets': double-buffered per-bucket exchange"
+                         " fused with per-bucket optimizer updates"
+                         " (needs an explicit --grad-reduction and"
+                         " --bucket-mb > 0)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "lamb"],

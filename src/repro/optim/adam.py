@@ -6,6 +6,17 @@ the parameters (ZeRO-1 when params are FSDP-sharded). Moment dtypes are
 configurable per architecture (``m_dtype``/``v_dtype``): arctic-480b
 stores m in bf16 so the optimizer state fits 16 GB HBM per chip.
 
+Flat-view path (``HetConfig.overlap="buckets"``): ``apply_update_flat``
+runs the same elementwise AdamW math on packed
+(num_buckets, bucket_elems) views of params/m/v (core/buckets.py
+layout), one bucket slice at a time, so the train step can fuse the
+update for bucket *k* into the reduction pipeline the moment bucket
+*k*'s reduced payload lands. The per-leaf decay-matrices-only rule
+travels as a packed ``decay_mask``; ``init_state_flat`` builds the
+moments directly in the packed layout. The elementwise math is
+identical to ``apply_update``, so (fp32, no clip) the fused pipeline is
+bit-identical to the monolithic tree update.
+
 All math accumulates in fp32 regardless of storage dtype.
 """
 from __future__ import annotations
@@ -32,6 +43,77 @@ def init_state(params: Any, cfg: OptimizerConfig) -> AdamState:
     return AdamState(step=jnp.zeros((), jnp.int32), m=m, v=v)
 
 
+def init_state_flat(num_buckets: int, bucket_elems: int,
+                    cfg: OptimizerConfig) -> AdamState:
+    """Zero moments in the packed (num_buckets, bucket_elems) layout."""
+    m = jnp.zeros((num_buckets, bucket_elems), jnp.dtype(cfg.m_dtype))
+    v = jnp.zeros((num_buckets, bucket_elems), jnp.dtype(cfg.v_dtype))
+    return AdamState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def bias_corrections(cfg: OptimizerConfig, step: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b1, b2 = cfg.betas
+    sf = step.astype(jnp.float32)
+    return 1.0 - b1 ** sf, 1.0 - b2 ** sf
+
+
+def flat_adamw_terms(p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray,
+                     v: jnp.ndarray, step: jnp.ndarray,
+                     cfg: OptimizerConfig, *,
+                     decay_mask: jnp.ndarray,
+                     clip_scale: Optional[jnp.ndarray] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                jnp.ndarray]:
+    """The shared elementwise AdamW math on packed views.
+
+    Returns (pf, update, mf, vf) in fp32 — the caller applies its own
+    step rule (plain ``pf - lr * update`` for AdamW, trust-ratio-scaled
+    for LAMB) so the moment/decay math lives in exactly one place.
+    """
+    bc1, bc2 = bias_corrections(cfg, step)
+    b1, b2 = cfg.betas
+    gf = g.astype(jnp.float32)
+    if clip_scale is not None:
+        gf = gf * clip_scale
+    mf = m.astype(jnp.float32) * b1 + gf * (1.0 - b1)
+    vf = v.astype(jnp.float32) * b2 + gf * gf * (1.0 - b2)
+    update = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+    pf = p.astype(jnp.float32)
+    if cfg.weight_decay > 0:
+        update = update + (cfg.weight_decay *
+                           decay_mask.astype(jnp.float32) * pf)
+    return pf, update, mf, vf
+
+
+def apply_update_flat(p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray,
+                      v: jnp.ndarray, step: jnp.ndarray,
+                      cfg: OptimizerConfig, lr: jnp.ndarray, *,
+                      decay_mask: jnp.ndarray,
+                      clip_scale: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One AdamW step on a packed bucket view (any shape, elementwise).
+
+    ``p``/``g``/``m``/``v``/``decay_mask`` are matching slices of the
+    flat bucket layout — one (bucket_elems,) bucket inside the fused
+    reduction pipeline, or the whole (num_buckets, bucket_elems) stack
+    on the clip-barrier path. ``step`` is the post-increment step (the
+    caller advances it once per train step, not per bucket).
+    ``clip_scale`` is the global-norm clip factor, precomputed by the
+    caller because it needs every bucket's reduced payload — with
+    ``grad_clip == 0`` pass None and the update is exactly
+    ``apply_update``'s elementwise math. Bucket padding stays zero by
+    construction (zero grads, zero moments, mask zero).
+
+    Returns (p', m', v') with storage dtypes preserved.
+    """
+    pf, update, mf, vf = flat_adamw_terms(
+        p, g, m, v, step, cfg, decay_mask=decay_mask,
+        clip_scale=clip_scale)
+    pf = pf - lr * update
+    return pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+
 def global_norm(tree: Any) -> jnp.ndarray:
     return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                         for g in jax.tree.leaves(tree)))
@@ -54,8 +136,7 @@ def apply_update(params: Any, grads: Any, state: AdamState,
         gnorm = global_norm(grads)
     step = state.step + 1
     b1, b2 = cfg.betas
-    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    bc1, bc2 = bias_corrections(cfg, step)
 
     def upd(p, g, m, v):
         gf = g.astype(jnp.float32)

@@ -13,10 +13,19 @@ breaks and LAMB's per-layer trust ratio
 keeps training stable. Shares Adam's moment state (and dtype policy /
 ZeRO-1 sharding); selectable via OptimizerConfig(name="lamb") everywhere
 Adam is.
+
+Flat-view path (``HetConfig.overlap="buckets"``): ``apply_update_flat``
+runs LAMB on the packed (num_buckets, bucket_elems) bucket stack. The
+trust ratio is PER LAYER, and leaves span bucket boundaries, so —
+unlike AdamW — LAMB cannot stream per-bucket updates as payloads land:
+the per-leaf ||p|| / ||update|| norms are rebuilt over the whole stack
+with segment sums keyed by ``core/buckets.py::segment_ids``. The train
+step therefore always takes the barrier path (pipelined exchange, then
+one flat update) when ``optimizer.name == "lamb"``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +44,7 @@ def apply_update(params: Any, grads: Any, state: adam.AdamState,
         gnorm = adam.global_norm(grads)
     step = state.step + 1
     b1, b2 = cfg.betas
-    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    bc1, bc2 = adam.bias_corrections(cfg, step)
 
     def upd(p, g, m, v):
         gf = g.astype(jnp.float32)
@@ -67,3 +75,33 @@ def apply_update(params: Any, grads: Any, state: adam.AdamState,
     mean_trust = jnp.mean(jnp.stack([o[3] for o in out]))
     metrics = {"grad_norm": gnorm, "lr": lr, "trust_ratio": mean_trust}
     return new_p, adam.AdamState(step=step, m=new_m, v=new_v), metrics
+
+
+def apply_update_flat(p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray,
+                      v: jnp.ndarray, step: jnp.ndarray,
+                      cfg: OptimizerConfig, lr: jnp.ndarray, *,
+                      decay_mask: jnp.ndarray, seg_ids: jnp.ndarray,
+                      num_leaves: int,
+                      clip_scale: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                 jnp.ndarray]:
+    """One LAMB step on the whole packed bucket stack.
+
+    ``seg_ids`` maps every element to its source leaf (padding maps to
+    ``num_leaves`` and gets trust 1, a no-op on zero padding). Returns
+    (p', m', v', mean trust ratio over real leaves).
+    """
+    pf, update, mf, vf = adam.flat_adamw_terms(
+        p, g, m, v, step, cfg, decay_mask=decay_mask,
+        clip_scale=clip_scale)
+    # per-leaf norms over the flat stream (leaves may span buckets)
+    sid = seg_ids.reshape(-1)
+    p_norm = jnp.sqrt(jax.ops.segment_sum(
+        jnp.square(pf.reshape(-1)), sid, num_segments=num_leaves + 1))
+    u_norm = jnp.sqrt(jax.ops.segment_sum(
+        jnp.square(update.reshape(-1)), sid, num_segments=num_leaves + 1))
+    trust = jnp.where((p_norm > 0) & (u_norm > 0), p_norm / u_norm, 1.0)
+    pf = pf - lr * trust[sid].reshape(pf.shape) * update
+    mean_trust = jnp.mean(trust[:num_leaves])
+    return (pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype),
+            mean_trust)
