@@ -24,14 +24,46 @@ DOC = """Benchmark suite — one entry per paper table/figure + roofline.
                        the fused pipeline diverges from the monolithic
                        update)
 
+--quick: the CI smoke tier — runs the fail-loud reduce/overlap bench
+smokes plus the repo's quick test tier (``pytest -m "not slow"``: the
+multi-device subprocess suites, hypothesis sweeps and driver
+integration tests carry a ``slow`` marker and stay in the full tier-1
+run), skipping the scaling sweeps.
+
 Prints a ``name,us_per_call,derived`` CSV summary at the end.
 """
 
+import argparse
+import os
+import subprocess
 import sys
 import time
 
 
+def _run_quick_test_tier() -> float:
+    """The -m 'not slow' pytest tier, as CI runs it. Fails loudly."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo, "src") +
+                         os.pathsep + env.get("PYTHONPATH", ""))
+    t0 = time.time()
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-m", "not slow",
+         "-p", "no:cacheprovider", os.path.join(repo, "tests")],
+        env=env, cwd=repo)
+    if proc.returncode != 0:
+        raise SystemExit(f"quick test tier failed "
+                         f"(exit {proc.returncode})")
+    return time.time() - t0
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fail-loud bench smokes + the "
+                         "-m 'not slow' pytest tier, no scaling sweeps")
+    args = ap.parse_args()
+
     t_all = time.time()
     csv = []
 
@@ -50,37 +82,41 @@ def main() -> None:
                 f"{ob['int8']['model']['model_speedup']:.2f}x "
                 f"exact_fp32={ob['fp32']['exact_match']}"))
 
-    t0 = time.time()
-    res = scaling_translation.main(max_nodes=8, steps=10)
-    base = res[0]
-    best = min(res, key=lambda r: r.avg_step_s)
-    csv.append(("scaling_translation", base.avg_step_s * 1e6,
-                f"best_speedup={base.total_s / best.total_s:.2f}x"))
+    if args.quick:
+        tier_s = _run_quick_test_tier()
+        csv.append(("quick_test_tier", 0.0, f"wall_s={tier_s:.1f}"))
+    else:
+        res = scaling_translation.main(max_nodes=8, steps=10)
+        base = res[0]
+        best = min(res, key=lambda r: r.avg_step_s)
+        csv.append(("scaling_translation", base.avg_step_s * 1e6,
+                    f"best_speedup={base.total_s / best.total_s:.2f}x"))
 
-    res = scaling_bert.main(max_nodes=8, steps=10)
-    base = res[0]
-    best = min(res, key=lambda r: r.avg_step_s)
-    csv.append(("scaling_bert", base.avg_step_s * 1e6,
-                f"best_speedup={base.total_s / best.total_s:.2f}x"))
+        res = scaling_bert.main(max_nodes=8, steps=10)
+        base = res[0]
+        best = min(res, key=lambda r: r.avg_step_s)
+        csv.append(("scaling_bert", base.avg_step_s * 1e6,
+                    f"best_speedup={base.total_s / best.total_s:.2f}x"))
 
-    res = scaling_small.main(max_nodes=8, steps=8)
-    base = res[0]
-    worst = max(res[1:], key=lambda r: r.avg_step_s) if len(res) > 1 \
-        else base
-    csv.append(("scaling_small", base.avg_step_s * 1e6,
-                f"overhead_at_scale={worst.avg_step_s / base.avg_step_s:.2f}x"))
+        res = scaling_small.main(max_nodes=8, steps=8)
+        base = res[0]
+        worst = max(res[1:], key=lambda r: r.avg_step_s) if len(res) > 1 \
+            else base
+        csv.append(("scaling_small", base.avg_step_s * 1e6,
+                    f"overhead_at_scale="
+                    f"{worst.avg_step_s / base.avg_step_s:.2f}x"))
 
-    rows = equivalence.main(trials=6)
-    worst_g = max(r[2] for r in rows)
-    csv.append(("equivalence", 0.0, f"max_grad_err={worst_g:.2e}"))
+        rows = equivalence.main(trials=6)
+        worst_g = max(r[2] for r in rows)
+        csv.append(("equivalence", 0.0, f"max_grad_err={worst_g:.2e}"))
 
-    rl = roofline_bench.main()
-    if rl:
-        import numpy as np
-        fr = [r.roofline_frac for r in rl if r.kind == "train"]
-        csv.append(("roofline", 0.0,
-                    f"train_cells={len(fr)} "
-                    f"median_roofline={100 * float(np.median(fr)):.1f}%"))
+        rl = roofline_bench.main()
+        if rl:
+            import numpy as np
+            fr = [r.roofline_frac for r in rl if r.kind == "train"]
+            csv.append(("roofline", 0.0,
+                        f"train_cells={len(fr)} median_roofline="
+                        f"{100 * float(np.median(fr)):.1f}%"))
 
     print("\n== CSV summary (name,us_per_call,derived) ==")
     for name, us, derived in csv:

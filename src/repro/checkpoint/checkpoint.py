@@ -1,15 +1,39 @@
-"""M7 — full-state checkpointing (async, atomic, rotated).
+"""M7 — full-state checkpointing (async, atomic, rotated, repackable).
 
 The paper's checkpoint carries: model parameters, completed epochs,
 completed steps, optimizer + LR-scheduler state, and the RNG seed. Ours
-additionally persists the capacity plan and the data-stream position so
-an elastic restart with a *different* mesh resumes the identical global
-sample stream (core/elastic.py invariant).
+additionally persists the capacity plan (as structured JSON that
+round-trips into a real ``CapacityPlan``) and the data-stream position
+(epoch + batches consumed within it) so an elastic restart with a
+*different* mesh resumes the identical global sample stream
+(core/elastic.py invariant).
 
-Layout: <dir>/step_<N>/
-  arrays.npz     every pytree leaf, keyed by flattened path
-  meta.json      step/epoch/seed/plan/treedef fingerprint
-  _DONE          commit marker (written last -> crash-atomic)
+On-disk layout (version 2): ``<dir>/step_<N>/``
+
+  arrays.npz   every pytree leaf, keyed by its escaped ``/``-joined
+               path (repack.path_key: components percent-escape ``%``
+               and ``/``, attribute/index keys map to bare name/index;
+               collisions raise at save time)
+  meta.json    step / epoch / seed / structured plan / data-stream
+               position, plus a ``"format"`` block: format version,
+               which TrainState fields were saved packed
+               (``overlap="buckets"`` stores AdamW/LAMB moments as one
+               (num_buckets, bucket_elems) stack), and the versioned
+               ``BucketLayout`` record + fingerprint describing that
+               grid (core/buckets.py::layout_record)
+  _DONE        commit marker, written into the temp dir before the
+               atomic rename — a crash at ANY point leaves either a
+               committed ``step_<N>`` or an ignorable ``.tmp``
+
+Repack-on-restore: ``restore`` hands the loaded arrays through
+``repack.adapt_arrays`` before unflattening, so a checkpoint written
+under any layout (packed moments of any bucket grid, pytree moments,
+flat or per-leaf error state, any reduction rank count) restores into
+whatever layout the caller's template expects — packed<->pytree and
+grid-to-grid translations go through the layout-invariant flat stream
+and are bit-exact (see checkpoint/repack.py for the one documented
+exception: per-rank error-feedback residuals across a rank-count
+change, where only their sum is conserved).
 
 Async: ``save`` snapshots device arrays to host (blocking, cheap), then
 writes files on a background thread — the train loop never waits on
@@ -28,24 +52,23 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.checkpoint import repack
+from repro.core.capacity import CapacityPlan, plan_from_record, plan_record
+
 _DONE = "_DONE"
+_PLAN_TAG = "__capacity_plan__"
 
 
 def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        flat[key] = np.asarray(leaf)
-    return flat
+    return {k: np.asarray(v)
+            for k, v in repack.flatten_with_paths(tree).items()}
 
 
 def _unflatten_like(template: Any, arrays: Dict[str, np.ndarray]) -> Any:
     paths_leaves = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in paths_leaves[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = repack.path_key(path)
         if key not in arrays:
             raise KeyError(f"checkpoint missing leaf '{key}'")
         arr = arrays[key]
@@ -55,6 +78,39 @@ def _unflatten_like(template: Any, arrays: Dict[str, np.ndarray]) -> Any:
                 f"model {leaf.shape}")
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+
+
+def _json_default(obj: Any) -> Any:
+    """Structured meta serialization — never silently stringify.
+
+    ``CapacityPlan`` becomes a tagged record that ``_meta_hook``
+    rebuilds into a real plan on load; numpy scalars/arrays become
+    plain JSON numbers/lists. Anything else raises loudly at save time
+    (surfaced by ``wait()``) instead of burying a useless ``str()`` in
+    meta.json.
+    """
+    if isinstance(obj, CapacityPlan):
+        return {_PLAN_TAG: plan_record(obj)}
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if isinstance(obj, jax.Array):
+        return np.asarray(obj).tolist()
+    raise TypeError(
+        f"checkpoint meta value of type {type(obj).__name__!r} is not "
+        f"JSON-serializable — give it a structured record (see "
+        f"plan_record) instead of relying on str()")
+
+
+def _meta_hook(d: Dict) -> Any:
+    if set(d) == {_PLAN_TAG}:
+        return plan_from_record(d[_PLAN_TAG])
+    return d
 
 
 class CheckpointManager:
@@ -72,12 +128,14 @@ class CheckpointManager:
         """Snapshot now, write in the background (one writer at a time)."""
         self.wait()                       # at most one in-flight write
         host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        flat = _flatten_with_paths(host_state)   # key collisions raise HERE
         meta = dict(meta or {})
         meta["step"] = int(step)
+        meta.setdefault("format", {"version": repack.FORMAT_VERSION})
 
         def write():
             try:
-                self._write(step, host_state, meta)
+                self._write(step, flat, meta)
                 self._rotate()
             except BaseException as e:     # surfaced on next wait()
                 self._error.append(e)
@@ -88,16 +146,16 @@ class CheckpointManager:
         if block:
             self.wait()
 
-    def _write(self, step: int, state: Any, meta: Dict) -> None:
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               meta: Dict) -> None:
         final = os.path.join(self.directory, f"step_{step:010d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **_flatten_with_paths(state))
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
         with open(os.path.join(tmp, "meta.json"), "w") as fh:
-            json.dump(meta, fh, indent=1, default=str)
+            json.dump(meta, fh, indent=1, default=_json_default)
         with open(os.path.join(tmp, _DONE), "w") as fh:
             fh.write("ok")
         if os.path.exists(final):
@@ -134,9 +192,17 @@ class CheckpointManager:
 
     def restore(self, template: Any, step: Optional[int] = None
                 ) -> Tuple[Any, Dict]:
-        """Returns (state shaped like ``template``, meta). The template
-        may be differently *sharded* than at save time (elastic re-mesh)
-        — shapes must match, placement is the caller's (device_put)."""
+        """Returns (state shaped like ``template``, meta).
+
+        The template may be differently *sharded* than at save time
+        (elastic re-mesh) — placement is the caller's (device_put) —
+        and may expect a different optimizer-state LAYOUT than was
+        saved: packed moments of any bucket grid, pytree moments, and
+        flat/per-leaf error state all translate through
+        ``repack.adapt_arrays`` (bit-exact, see checkpoint/repack.py).
+        Template leaves only need ``.shape``/``.dtype`` —
+        ShapeDtypeStructs work.
+        """
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
@@ -146,5 +212,6 @@ class CheckpointManager:
         with np.load(os.path.join(path, "arrays.npz")) as z:
             arrays = {k: z[k] for k in z.files}
         with open(os.path.join(path, "meta.json")) as fh:
-            meta = json.load(fh)
+            meta = json.load(fh, object_hook=_meta_hook)
+        arrays = repack.adapt_arrays(arrays, template, meta.get("format"))
         return _unflatten_like(template, arrays), meta

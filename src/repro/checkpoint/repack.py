@@ -1,0 +1,330 @@
+"""Layout-portable checkpoint repack (overlap mode <-> anything).
+
+Since the overlapped bucket pipeline landed, ``HetConfig.overlap=
+"buckets"`` stores the AdamW/LAMB moments packed as ONE
+``(num_buckets, bucket_elems)`` f32 stack whose grid is a pure function
+of ``(param tree, bucket_mb, reduction ranks, quantization block)``. A
+checkpoint written that way could previously only be restored into the
+*identical* grid: a different ``bucket_mb``, a re-meshed pod count
+(different ``multiple_of``), or a non-overlap run (pytree moments) all
+change the expected shapes — and the elastic re-mesh story (HetSeq's
+core claim: resume the identical trajectory on new hardware) did not
+survive the overlap fast path.
+
+This module makes the checkpoint layout-portable. The key observation:
+the packed stack is just the *flat stream* (every leaf raveled and
+concatenated in pytree-flatten order) zero-padded and reshaped, and the
+stream is layout-invariant. Every translation goes through it::
+
+  packed(A)  -> stream -> packed(B)   re-grid (bucket_mb / re-mesh)
+  packed(A)  -> stream -> per-leaf    overlap -> non-overlap resume
+  per-leaf   -> stream -> packed(B)   non-overlap -> overlap resume
+
+All three are bit-exact: packing is a reshape + zero-pad, and the
+padded tail is zero on every reachable training state (moments start
+zero, bucket padding receives zero gradient, the decay mask zeroes the
+padding update), which :func:`fit_stream` verifies before trimming.
+
+Error-feedback state (``TrainState.err``, one residual stack per
+reduction rank) repacks the same way per rank when the rank count is
+unchanged. Across a rank-count change the per-rank residuals have no
+exact image (the ranks that produced them no longer exist); the total
+outstanding residual is what re-enters future gradients, so the rank
+streams are summed and carried by rank 0 — the conserved quantity
+survives, the per-rank split does not (documented trade; fp32 runs
+without error feedback repack bit-exactly in every direction).
+
+``adapt_arrays`` is the entry point: it rewrites the flattened
+``{path-key: array}`` dict loaded from ``arrays.npz`` so it matches the
+caller's template, using the versioned layout record saved in
+``meta.json`` (``checkpoint.CheckpointManager`` calls it inside
+``restore``, so every restore is layout-portable automatically).
+
+Path keys: checkpoints address leaves by ``"/"``-joined key paths.
+Components are percent-escaped (``%`` -> ``%25``, ``/`` -> ``%2F``) so
+dict keys containing ``/`` cannot collide with nested paths, and
+attribute/index key types map to their bare name/index
+(``TrainState.opt.m`` -> ``"opt/m"``). :func:`flatten_with_paths`
+raises at save time if two leaves ever land on the same key.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+from jax import tree_util as jtu
+
+# Bump when the on-disk layout of arrays.npz / the format block in
+# meta.json changes incompatibly. Version 1 = unescaped ad-hoc keys,
+# stringified meta (pre-repack); version 2 = escaped keys + structured
+# meta + layout records.
+FORMAT_VERSION = 2
+
+MOMENT_GROUPS = ("opt/m", "opt/v")
+ERR_GROUP = "err"
+PARAMS_PREFIX = "params/"
+
+
+# --------------------------------------------------------------------------
+# path keys
+# --------------------------------------------------------------------------
+
+
+def _escape(component: str) -> str:
+    """Injective escaping: no raw '/' survives, so joined keys decode
+    uniquely back into components."""
+    return component.replace("%", "%25").replace("/", "%2F")
+
+
+def path_component(entry: Any) -> str:
+    if isinstance(entry, jtu.DictKey):
+        return _escape(str(entry.key))
+    if isinstance(entry, jtu.GetAttrKey):
+        return _escape(entry.name)
+    if isinstance(entry, jtu.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jtu.FlattenedIndexKey):
+        return str(entry.key)
+    return _escape(str(entry))
+
+
+def path_key(path: Sequence[Any]) -> str:
+    return "/".join(path_component(p) for p in path)
+
+
+def flatten_with_paths(tree: Any) -> Dict[str, Any]:
+    """Ordered ``{escaped key path: leaf}`` — raises on collision.
+
+    Collisions cannot arise from dict keys containing ``/`` (escaped)
+    or from mixed key types at one node (a node is exactly one
+    container type); the check guards custom pytree key types whose
+    ``str()`` is ambiguous.
+    """
+    out: Dict[str, Any] = {}
+    for path, leaf in jtu.tree_flatten_with_path(tree)[0]:
+        key = path_key(path)
+        if key in out:
+            raise ValueError(
+                f"checkpoint path key collision: two leaves flatten to "
+                f"'{key}' — register distinct key types for this pytree")
+        out[key] = leaf
+    return out
+
+
+# --------------------------------------------------------------------------
+# the flat stream
+# --------------------------------------------------------------------------
+
+
+def fit_stream(stream: np.ndarray, n: int, what: str = "state"
+               ) -> np.ndarray:
+    """Return the stream resized to exactly ``n`` elements.
+
+    Growing pads with zeros (new grid has more padding); shrinking
+    verifies the dropped tail is all-zero — nonzero data past the
+    target length means the checkpoint does not actually fit the target
+    layout (corrupt file or wrong model) and raises.
+    """
+    flat = np.asarray(stream).reshape(-1)
+    if flat.size == n:
+        return flat
+    if flat.size < n:
+        out = np.zeros(n, flat.dtype)
+        out[:flat.size] = flat
+        return out
+    if np.any(flat[n:]):
+        raise ValueError(
+            f"cannot repack '{what}': checkpoint holds nonzero data past "
+            f"element {n} ({flat.size} saved) — the saved state does not "
+            f"fit the target layout")
+    return flat[:n]
+
+
+def _sizes(shapes: Sequence[Sequence[int]]) -> List[int]:
+    return [int(np.prod(s)) if len(s) else 1 for s in shapes]
+
+
+# --------------------------------------------------------------------------
+# group translation
+# --------------------------------------------------------------------------
+
+
+def _group_leaf_order(template: Dict[str, Any], saved_keys: List[str],
+                      group: str) -> List[str]:
+    """Stream order for a per-leaf group being packed.
+
+    Moment/err trees mirror the params tree, so the canonical order is
+    the template's ``params/`` flatten order transplanted onto the
+    group prefix. When the template has no params mirror (bare-dict
+    states in tests), fall back to the saved insertion order — which is
+    the save-time flatten order of the same treedef.
+    """
+    subpaths = [k[len(PARAMS_PREFIX):] for k in template
+                if k.startswith(PARAMS_PREFIX)]
+    expected = [f"{group}/{s}" for s in subpaths]
+    if subpaths and set(expected) == set(saved_keys):
+        return expected
+    return saved_keys
+
+
+def _adapt_group(arrays: Dict[str, np.ndarray], template: Dict[str, Any],
+                 group: str, record: Optional[Dict]) -> None:
+    """Translate one moment group in place to the template's form."""
+    saved_packed = group in arrays
+    tpl_packed = group in template
+    tpl_sub = [k for k in template if k.startswith(group + "/")]
+    saved_sub = [k for k in arrays if k.startswith(group + "/")]
+
+    if saved_packed and tpl_packed:
+        tgt = tuple(int(d) for d in template[group].shape)
+        if tuple(arrays[group].shape) == tgt:
+            return
+        if len(tgt) != 2:
+            raise ValueError(
+                f"packed group '{group}' restores into rank-{len(tgt)} "
+                f"template leaf; expected (num_buckets, bucket_elems)")
+        stream = np.asarray(arrays[group]).reshape(-1)
+        if record is not None:
+            # strict trim through the recorded true (pre-padding) total
+            stream = fit_stream(stream, int(record["total"]), group)
+        arrays[group] = fit_stream(stream, tgt[0] * tgt[1],
+                                   group).reshape(tgt)
+    elif saved_packed and not tpl_packed:
+        if not tpl_sub:
+            return                     # template holds no such group
+        sizes = _sizes([template[k].shape for k in tpl_sub])
+        total = sum(sizes)
+        if record is not None and int(record["total"]) != total:
+            raise ValueError(
+                f"layout mismatch unpacking '{group}': checkpoint stream "
+                f"holds {record['total']} elements, template pytree "
+                f"expects {total} (fingerprint "
+                f"{record.get('fingerprint', '?')})")
+        stream = fit_stream(arrays.pop(group), total, group)
+        off = 0
+        for key, n in zip(tpl_sub, sizes):
+            arrays[key] = stream[off:off + n].reshape(template[key].shape)
+            off += n
+    elif not saved_packed and tpl_packed:
+        if not saved_sub:
+            return                     # nothing saved -> missing-leaf error
+        order = _group_leaf_order(template, saved_sub, group)
+        stream = np.concatenate(
+            [np.asarray(arrays.pop(k)).reshape(-1) for k in order])
+        nb, be = (int(d) for d in template[group].shape)
+        arrays[group] = fit_stream(stream, nb * be, group).reshape(nb, be)
+
+
+def _redistribute_ranks(streams: np.ndarray, target_ranks: int
+                        ) -> np.ndarray:
+    """(ranks, n) residual streams -> (target_ranks, n).
+
+    Same rank count: identity (bit-exact). Different: the per-rank
+    residuals have no exact image — conserve their SUM on rank 0 (the
+    quantity that re-enters future gradients) and zero the rest.
+    """
+    ranks = streams.shape[0]
+    if ranks == target_ranks:
+        return streams
+    out = np.zeros((target_ranks, streams.shape[1]), streams.dtype)
+    out[0] = streams.sum(axis=0)
+    return out
+
+
+def _adapt_err(arrays: Dict[str, np.ndarray],
+               template: Dict[str, Any]) -> None:
+    """Translate the error-feedback group to the template's form.
+
+    Handles flat (ranks, num_buckets, bucket_elems) stacks, legacy
+    per-leaf (ranks, *leaf) mirrors, and absence on either side (a
+    checkpoint without residual state restores into an error-feedback
+    config with FRESH zero residuals; a target without error feedback
+    ignores saved residuals).
+    """
+    tpl_flat = ERR_GROUP in template
+    tpl_sub = [k for k in template if k.startswith(ERR_GROUP + "/")]
+    if not tpl_flat and not tpl_sub:
+        return
+    saved_flat = ERR_GROUP in arrays
+    saved_sub = [k for k in arrays if k.startswith(ERR_GROUP + "/")]
+
+    streams: Optional[np.ndarray] = None
+    if saved_flat:
+        a = np.asarray(arrays.pop(ERR_GROUP))
+        streams = a.reshape(a.shape[0], -1)
+    elif saved_sub:
+        order = _group_leaf_order(template, saved_sub, ERR_GROUP)
+        per_leaf = [np.asarray(arrays.pop(k)) for k in order]
+        ranks = per_leaf[0].shape[0]
+        streams = np.concatenate(
+            [a.reshape(ranks, -1) for a in per_leaf], axis=1)
+
+    if tpl_flat:
+        ranks_t, nb, be = (int(d) for d in template[ERR_GROUP].shape)
+        if streams is None:
+            arrays[ERR_GROUP] = np.zeros((ranks_t, nb, be), np.float32)
+            return
+        streams = _redistribute_ranks(streams, ranks_t)
+        arrays[ERR_GROUP] = np.stack(
+            [fit_stream(s, nb * be, ERR_GROUP) for s in streams]
+        ).reshape(ranks_t, nb, be)
+    else:
+        ranks_t = int(template[tpl_sub[0]].shape[0])
+        shapes = [tuple(int(d) for d in template[k].shape[1:])
+                  for k in tpl_sub]
+        sizes = _sizes(shapes)
+        total = sum(sizes)
+        if streams is None:
+            for key in tpl_sub:
+                arrays[key] = np.zeros(template[key].shape, np.float32)
+            return
+        streams = _redistribute_ranks(streams, ranks_t)
+        fitted = np.stack([fit_stream(s, total, ERR_GROUP)
+                           for s in streams])
+        off = 0
+        for key, n, shape in zip(tpl_sub, sizes, shapes):
+            arrays[key] = fitted[:, off:off + n].reshape(
+                (ranks_t,) + shape)
+            off += n
+
+
+# --------------------------------------------------------------------------
+# entry point
+# --------------------------------------------------------------------------
+
+
+def adapt_arrays(arrays: Dict[str, np.ndarray], template: Any,
+                 fmt: Optional[Dict] = None) -> Dict[str, np.ndarray]:
+    """Rewrite a loaded ``{path key: array}`` dict to fit ``template``.
+
+    ``template`` is the state pytree the caller wants back (real arrays
+    or ShapeDtypeStructs — only ``.shape`` is read). ``fmt`` is the
+    ``"format"`` block from ``meta.json`` (may be None for bare saves
+    that passed no format meta): it carries the format version, which
+    fields were saved packed, and the versioned layout record used for
+    strict total/fingerprint validation. Translation itself is
+    structural — the flat stream is canonical — so format-less
+    checkpoints written by THIS key scheme still repack; the record
+    only tightens the error checking. Checkpoints from builds predating
+    the escaped key scheme (format version < 2, ad-hoc ``str()`` keys)
+    are not readable — no deployment persisted any, so no v1 key
+    translation is carried.
+    """
+    fmt = fmt or {}
+    version = fmt.get("version")
+    if version is not None and int(version) > FORMAT_VERSION:
+        raise ValueError(
+            f"checkpoint format version {version} is newer than this "
+            f"build supports ({FORMAT_VERSION})")
+    record = fmt.get("layout") or None
+
+    template_flat = flatten_with_paths(template)
+    out = dict(arrays)
+    groups = list(MOMENT_GROUPS)
+    for g in fmt.get("packed_fields") or ():
+        if g not in groups and g != ERR_GROUP:
+            groups.append(g)
+    for g in groups:
+        _adapt_group(out, template_flat, g, record)
+    _adapt_err(out, template_flat)
+    return out

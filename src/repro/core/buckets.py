@@ -60,6 +60,14 @@ collectives inside a scan in a partially-manual region, so the compat
 path unrolls the identical body in python (same dependency structure,
 nb-times-larger HLO).
 
+Checkpoint portability: the packed layout is a pure function of
+(param tree, bucket_mb, reduction ranks, block size), so
+``layout_record`` / ``layout_fingerprint`` serialize a versioned
+description of the grid into checkpoint meta.json and
+``checkpoint/repack.py`` translates packed state between any two grids
+(or the pytree layout) through the flat stream — an overlap checkpoint
+survives re-meshing.
+
 Config: ``HetConfig.bucket_mb`` (0 = legacy per-leaf paths),
 ``HetConfig.quantize_impl`` selects the reference vs Pallas kernels,
 ``HetConfig.overlap`` selects the monolithic vs pipelined schedule.
@@ -71,8 +79,10 @@ per-bucket pipeline timeline + measured wall times).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -144,6 +154,76 @@ def build_layout(tree: Any, *, bucket_mb: float = 4.0,
     return BucketLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
                         offsets=tuple(offsets), sizes=sizes, total=total,
                         bucket_elems=bucket_elems, num_buckets=num_buckets)
+
+
+# Bump when the serialized layout record changes incompatibly
+# (checkpoint/repack.py validates it on restore).
+LAYOUT_VERSION = 1
+
+_FINGERPRINT_FIELDS = ("bucket_elems", "num_buckets", "total", "offsets",
+                       "sizes", "shapes", "dtypes")
+
+
+def layout_fingerprint(record: Dict) -> str:
+    """Stable short hash of the grid-defining fields of a layout record.
+
+    Two checkpoints with equal fingerprints hold interchangeable packed
+    stacks; unequal fingerprints need a repack through the flat stream
+    (checkpoint/repack.py). ``leaf_paths`` and ``version`` are excluded
+    — they describe provenance, not the grid.
+    """
+    body = {k: record[k] for k in _FINGERPRINT_FIELDS if k in record}
+    return hashlib.sha1(
+        json.dumps(body, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def layout_record(layout: BucketLayout,
+                  leaf_paths: Optional[Sequence[str]] = None) -> Dict:
+    """JSON-able versioned description of a :class:`BucketLayout`.
+
+    Saved into checkpoint ``meta.json`` so a restore can (a) detect a
+    grid mismatch by fingerprint and (b) strictly validate the flat
+    stream length when repacking. ``leaf_paths`` (the escaped
+    checkpoint key path of every leaf, see ``repack.path_key``) records
+    which parameter each stream range belongs to.
+    """
+    rec: Dict[str, Any] = {
+        "version": LAYOUT_VERSION,
+        "bucket_elems": int(layout.bucket_elems),
+        "num_buckets": int(layout.num_buckets),
+        "total": int(layout.total),
+        "offsets": [int(o) for o in layout.offsets],
+        "sizes": [int(s) for s in layout.sizes],
+        "shapes": [list(s) for s in layout.shapes],
+        "dtypes": [str(jnp.dtype(d)) for d in layout.dtypes],
+    }
+    if leaf_paths is not None:
+        rec["leaf_paths"] = [str(p) for p in leaf_paths]
+    rec["fingerprint"] = layout_fingerprint(rec)
+    return rec
+
+
+def layout_from_record(record: Dict, treedef: Any = None) -> BucketLayout:
+    """Rebuild a :class:`BucketLayout` from its serialized record.
+
+    ``treedef`` (from the restoring process's own param tree) is needed
+    only for ``unpack_buckets``; stream-level repacking works without
+    it. Raises on unknown record versions.
+    """
+    version = int(record.get("version", 0))
+    if version > LAYOUT_VERSION:
+        raise ValueError(
+            f"bucket layout record version {version} is newer than this "
+            f"build supports ({LAYOUT_VERSION})")
+    return BucketLayout(
+        treedef=treedef,
+        shapes=tuple(tuple(int(d) for d in s) for s in record["shapes"]),
+        dtypes=tuple(jnp.dtype(d) for d in record["dtypes"]),
+        offsets=tuple(int(o) for o in record["offsets"]),
+        sizes=tuple(int(s) for s in record["sizes"]),
+        total=int(record["total"]),
+        bucket_elems=int(record["bucket_elems"]),
+        num_buckets=int(record["num_buckets"]))
 
 
 def pack_buckets(tree: Any, layout: BucketLayout) -> jnp.ndarray:

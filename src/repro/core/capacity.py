@@ -50,6 +50,29 @@ class CapacityPlan:
         return float(self.global_rows) / float(self.padded_rows)
 
 
+def plan_record(plan: CapacityPlan) -> dict:
+    """Structured JSON-able form of a plan (checkpoint meta.json).
+
+    The checkpoint layer refuses to stringify plans (a str round-trips
+    to nothing); this record round-trips through
+    :func:`plan_from_record` into a real, usable :class:`CapacityPlan`.
+    """
+    return {
+        "capacities": [float(c) for c in plan.capacities],
+        "rows_per_rank": [int(r) for r in plan.rows_per_rank],
+        "buffer_rows": int(plan.buffer_rows),
+        "global_rows": int(plan.global_rows),
+    }
+
+
+def plan_from_record(record: dict) -> CapacityPlan:
+    return CapacityPlan(
+        capacities=np.asarray(record["capacities"], np.float32),
+        rows_per_rank=np.asarray(record["rows_per_rank"], np.int64),
+        buffer_rows=int(record["buffer_rows"]),
+        global_rows=int(record["global_rows"]))
+
+
 def plan_capacities(
     global_rows: int,
     capacities: Sequence[float],

@@ -58,6 +58,15 @@ class RemeshDecision:
     topology: MeshTopology
     plan: CapacityPlan
     reason: str
+    # Multiply HetConfig.accum_steps by this on restart to preserve the
+    # per-microbatch grid across the DP-width change: the grad the new
+    # mesh accumulates then sums the SAME per-microbatch partials in the
+    # SAME association order the old mesh's cross-rank psum used, so the
+    # resumed trajectory is bit-identical to the uninterrupted run (not
+    # just mathematically equal — fp summation grouping is preserved).
+    # 1 when the old DP width does not divide evenly (equality then
+    # holds to fp reduction-order tolerance only).
+    accum_scale: int = 1
 
 
 def plan_remesh(
@@ -65,6 +74,7 @@ def plan_remesh(
     alive_pods: Sequence[int],
     global_rows: int,
     capacities_per_pod: Optional[Sequence[float]] = None,
+    round_buffer_to: int = 1,
 ) -> RemeshDecision:
     """Decide how to continue after a membership change.
 
@@ -72,7 +82,11 @@ def plan_remesh(
     this is a no-op (soft path handles intra-pod stragglers). Otherwise
     rebuild with the surviving pods and re-plan the same global batch
     over the smaller DP width — per-rank buffers grow, weights stay
-    exact, the optimizer trajectory is unchanged.
+    exact, the optimizer trajectory is unchanged. ``round_buffer_to``
+    (pass the CURRENT accum_steps) keeps the new buffer divisible into
+    microbatches: the returned plan's buffer divides by
+    ``round_buffer_to * accum_scale``, matching the post-scale
+    accum_steps the caller applies on restart.
     """
     alive = sorted(set(alive_pods))
     if len(alive) == current.pods:
@@ -81,7 +95,8 @@ def plan_remesh(
             np.repeat(np.asarray(capacities_per_pod, np.float64),
                       current.data_per_pod)
             if capacities_per_pod is not None
-            else np.ones(current.dp_size))
+            else np.ones(current.dp_size),
+            round_buffer_to=round_buffer_to)
         return RemeshDecision(False, current, plan, "membership unchanged")
     if not alive:
         raise ValueError("no pods alive")
@@ -90,15 +105,43 @@ def plan_remesh(
                             model=current.model)
     caps = (np.asarray([capacities_per_pod[p] for p in alive], np.float64)
             if capacities_per_pod is not None else np.ones(len(alive)))
+    accum_scale = (current.dp_size // new_topo.dp_size
+                   if current.dp_size % new_topo.dp_size == 0 else 1)
+    # the caller multiplies accum_steps by accum_scale on restart, so
+    # the buffer must divide by the PRODUCT (a max() would leave e.g.
+    # accum 2 x scale 2 = 4 microbatches over a buffer rounded to 2)
     plan = plan_capacities(global_rows,
-                           np.repeat(caps, new_topo.data_per_pod))
+                           np.repeat(caps, new_topo.data_per_pod),
+                           round_buffer_to=(max(round_buffer_to, 1) *
+                                            accum_scale))
     return RemeshDecision(
         True, new_topo, plan,
         f"pods {sorted(set(range(current.pods)) - set(alive))} lost; "
-        f"re-mesh to {new_topo.mesh_shape()} and resume from checkpoint")
+        f"re-mesh to {new_topo.mesh_shape()} and resume from checkpoint",
+        accum_scale=accum_scale)
 
 
 def validate_resume_equivalence(plan_a: CapacityPlan, plan_b: CapacityPlan
                                 ) -> bool:
-    """Two plans consume the same global batch (exact-resume invariant)."""
-    return plan_a.global_rows == plan_b.global_rows
+    """Two plans consume the same global record stream (exact resume).
+
+    Comparing ``global_rows`` alone passes plans that consume
+    *different* record streams: the sampler hands rank *r* the rows
+    ``[sum(n_<r), sum(n_<=r))`` of each global batch, so the invariant
+    is about the consumed-row assignment — each plan's
+    capacity-normalized per-rank rows must sum to (partition) the same
+    global prefix ``[0, global_rows)``, with every rank's slice
+    actually fitting its buffer. A plan whose rows over- or under-cover
+    the prefix (negative rows, rows past the buffer, sum != global)
+    would silently drop or duplicate records on resume. Rank COUNT may
+    differ — that is the elastic point; coverage may not.
+    """
+    def covers_prefix(plan: CapacityPlan) -> bool:
+        rows = np.asarray(plan.rows_per_rank, np.int64)
+        return (rows.size > 0
+                and int(rows.min()) >= 0
+                and int(rows.max()) <= plan.buffer_rows
+                and int(rows.sum()) == plan.global_rows)
+
+    return (covers_prefix(plan_a) and covers_prefix(plan_b)
+            and plan_a.global_rows == plan_b.global_rows)

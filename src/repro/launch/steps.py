@@ -147,6 +147,35 @@ def bucket_layout(model: Model, tcfg: TrainConfig,
                             multiple_of=ranks * _BLOCK)
 
 
+def checkpoint_format(model: Model, tcfg: TrainConfig, mesh: Mesh) -> Dict:
+    """The checkpoint ``"format"`` meta block for this config cell.
+
+    Records how this cell lays TrainState out on disk: which fields are
+    saved packed (``overlap="buckets"`` stores the optimizer moments as
+    one (num_buckets, bucket_elems) stack) and the versioned
+    ``BucketLayout`` record + fingerprint describing that grid, so a
+    restore into ANY other cell can translate through the flat stream
+    (checkpoint/repack.py) instead of failing on shape mismatch.
+    """
+    from repro.checkpoint import repack
+
+    fmt: Dict[str, Any] = {"version": repack.FORMAT_VERSION,
+                           "state": "pytree", "packed_fields": [],
+                           "layout": None}
+    if _overlap_enabled(tcfg, mesh):
+        lo = bucket_layout(model, tcfg, mesh)
+        params_shape = jax.eval_shape(model.init_params,
+                                      jax.random.PRNGKey(0))
+        paths = [repack.path_key(p) for p, _ in
+                 jax.tree_util.tree_flatten_with_path(params_shape)[0]]
+        rec = bkt.layout_record(lo, leaf_paths=paths)
+        fmt.update(state="packed",
+                   packed_fields=["opt/m", "opt/v"],
+                   layout=rec,
+                   fingerprint=rec["fingerprint"])
+    return fmt
+
+
 def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh):
     params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
     if _overlap_enabled(tcfg, mesh):

@@ -5,8 +5,20 @@ het sampler + prefetch loader -> jitted SPMD train step (weighted DP,
 optional hierarchical/compressed reduction) -> straggler monitor ->
 checkpointing -> elastic restart.
 
+Elastic restart (core/elastic.py regime 2): when soft replanning cannot
+absorb a membership change (``RemeshRequired``), the driver maps dead
+DP ranks to lost pods, asks ``elastic.plan_remesh`` for the surviving
+topology + capacity plan, rebuilds the mesh/step/loader, and restores
+the latest checkpoint into the new layout — ``CheckpointManager.restore``
+repacks packed optimizer state across bucket grids and mesh sizes
+(checkpoint/repack.py), and ``elastic.validate_resume_equivalence``
+verifies the old and new plans consume the identical global record
+stream before training continues at the saved data-stream position.
+
 Runs on anything: real TPU pods (production mesh) or this CPU container
 (--devices data,model uses host devices; --smoke uses reduced configs).
+``--kill-pod P@S`` injects a pod failure at step S to exercise the full
+detect -> replan -> remesh -> repacked-resume path end to end.
 
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
@@ -16,9 +28,10 @@ Example (CPU):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +44,7 @@ from repro.configs import base as cfgbase
 from repro.configs.base import (HetConfig, OptimizerConfig, ShapeConfig,
                                 TrainConfig)
 from repro.core import capacity as cap
+from repro.core import elastic
 from repro.core.straggler import RemeshRequired, StragglerMonitor
 from repro.data.dataset import ShardedDataset
 from repro.data.loader import PrefetchLoader
@@ -67,7 +81,8 @@ def build_everything(args):
             compression=args.compression,
             bucket_mb=args.bucket_mb,
             overlap=args.overlap,
-            accum_steps=args.accum),
+            accum_steps=args.accum,
+            replan_interval=args.replan_interval),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   warmup_steps=args.warmup,
                                   total_steps=args.steps,
@@ -87,9 +102,36 @@ def make_plan(tcfg: TrainConfig, mesh) -> cap.CapacityPlan:
                                                    1))
 
 
+def topology_from_mesh(mesh) -> elastic.MeshTopology:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return elastic.MeshTopology(pods=shape.get("pod", 1),
+                                data_per_pod=shape.get("data", 1),
+                                model=shape.get("model", 1))
+
+
+def mesh_for_topology(topo: elastic.MeshTopology):
+    """Mesh over the first N live devices (re-mesh uses a device subset
+    — on a real fleet the coordinator would hand back the survivors)."""
+    shape = topo.mesh_shape()
+    n = int(np.prod(shape))
+    if n > len(jax.devices()):
+        raise SystemExit(f"re-mesh needs {n} devices, "
+                         f"have {len(jax.devices())}")
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, topo.mesh_axes())
+
+
+def _parse_kill(spec: str) -> Optional[Tuple[int, int]]:
+    """'P@S' -> (pod P, from global step S). Fault-injection harness."""
+    if not spec:
+        return None
+    pod, at = spec.split("@")
+    return int(pod), int(at)
+
+
 def train(args) -> Dict[str, float]:
     cfg, model, mesh, tcfg = build_everything(args)
-    n_dp = dp_size(mesh)
+    topo = topology_from_mesh(mesh)
     plan = make_plan(tcfg, mesh)
     print(f"[train] {cfg.name}: {cfg.param_count():,} params, mesh "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}, plan rows "
@@ -101,69 +143,202 @@ def train(args) -> Dict[str, float]:
         seq_len=args.seq_len + 1, vocab=cfg.vocab_size,
         rows_per_shard=64, seed=tcfg.seed)
     ds = ShardedDataset(corpus)
-    sampler = HetSampler(ds, plan, seed=tcfg.seed)
-    loader = PrefetchLoader(sampler, depth=args.prefetch)
-
-    with compat.set_mesh(mesh):
-        step_fn = steps_mod.build_train_step(model, tcfg, mesh)
-        state = steps_mod.init_train_state(model, tcfg, mesh,
-                                           jax.random.PRNGKey(tcfg.seed))
     mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+    kill = _parse_kill(args.kill_pod)
+    if kill is not None and not 0 <= kill[0] < topo.pods:
+        raise SystemExit(f"--kill-pod {kill[0]} out of range: mesh has "
+                         f"{topo.pods} pod(s)")
+
+    def build_runtime(mesh, plan):
+        """Everything that depends on the mesh / plan (rebuilt on
+        re-mesh)."""
+        with compat.set_mesh(mesh):
+            step_fn = steps_mod.build_train_step(model, tcfg, mesh)
+        sampler = HetSampler(ds, plan, seed=tcfg.seed)
+        loader = PrefetchLoader(sampler, depth=args.prefetch)
+        bspecs = named(mesh, batch_specs(cfg, mesh, plan.padded_rows))
+        fmt = steps_mod.checkpoint_format(model, tcfg, mesh)
+        return step_fn, sampler, loader, bspecs, fmt
+
+    def restore_state(mesh, plan):
+        """Repacked restore: the template carries THIS config's layout;
+        the manager translates whatever the checkpoint holds into it."""
+        template = steps_mod.state_shapes(model, tcfg, mesh)
+        host, meta = mgr.restore(template)
+        saved_plan = meta.get("plan")
+        if saved_plan is not None and not \
+                elastic.validate_resume_equivalence(saved_plan, plan):
+            raise SystemExit(
+                f"[train] resume refused: checkpoint plan "
+                f"(rows {list(saved_plan.rows_per_rank)}, global "
+                f"{saved_plan.global_rows}) and the current plan "
+                f"(rows {plan.rows_per_rank.tolist()}, global "
+                f"{plan.global_rows}) consume different global record "
+                f"streams")
+        specs = steps_mod.state_specs(model, tcfg, mesh)
+        with compat.set_mesh(mesh):
+            state = jax.device_put(host, named(mesh, specs))
+        stream = meta.get("stream") or {}
+        position = (int(meta["step"]),
+                    int(stream.get("epoch", meta.get("epoch", 0))),
+                    int(stream.get("batch_in_epoch", 0)))
+        return state, position
+
+    step_fn, sampler, loader, bspecs, fmt = build_runtime(mesh, plan)
+    n_dp = dp_size(mesh)
     start_step = 0
+    epoch = 0
+    batch_in_epoch = 0
     if args.resume and mgr.latest_step() is not None:
-        host_state, meta = mgr.restore(jax.device_get(state))
-        state = jax.device_put(state.__class__(*host_state))
-        start_step = meta["step"]
-        print(f"[train] resumed from step {start_step}")
+        state, (start_step, epoch, batch_in_epoch) = restore_state(mesh,
+                                                                   plan)
+        print(f"[train] resumed from step {start_step} "
+              f"(epoch {epoch}, batch {batch_in_epoch})")
+    else:
+        with compat.set_mesh(mesh):
+            state = steps_mod.init_train_state(
+                model, tcfg, mesh, jax.random.PRNGKey(tcfg.seed))
 
     monitor = StragglerMonitor(num_ranks=n_dp,
                                ema_decay=tcfg.het.straggler_ema,
                                replan_interval=tcfg.het.replan_interval)
-    bspecs = named(mesh, batch_specs(cfg, mesh, plan.padded_rows))
+
+    def save_meta():
+        return {"epoch": epoch, "seed": tcfg.seed, "plan": plan,
+                "format": fmt,
+                "stream": {"epoch": epoch,
+                           "batch_in_epoch": batch_in_epoch}}
 
     step = start_step
     losses = []
     t_start = time.time()
-    epoch = 0
-    with compat.set_mesh(mesh):
-        while step < args.steps:
-            for raw in loader.iter_epoch(epoch):
-                if step >= args.steps:
-                    break
-                # hetsampler pads the *labels*: inputs are the shifted view
-                batch = {
-                    "inputs": jnp.asarray(raw["inputs"][:, :args.seq_len]),
-                    "labels": jnp.asarray(raw["labels"][:, :args.seq_len]),
-                    "weights": jnp.asarray(
-                        raw["weights"][:, :args.seq_len]),
-                }
-                batch = jax.device_put(batch, bspecs)
-                t0 = time.time()
-                state, metrics = step_fn(state, batch)
-                loss = float(metrics["loss"])
-                dt = time.time() - t0
-                losses.append(loss)
-                step += 1
-                # per-rank step times: on real fleets each host reports;
-                # here every rank shares the host clock
-                monitor.observe([dt] * n_dp)
-                if monitor.should_replan():
-                    try:
-                        plan = monitor.replan(plan)
-                        sampler.set_plan(plan)
-                    except RemeshRequired as e:
-                        print(f"[train] remesh required: {e}")
-                        raise
-                if step % args.log_every == 0:
-                    print(f"[train] step {step:5d} loss {loss:.4f} "
-                          f"({dt * 1e3:.0f} ms)")
-                if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
-                    mgr.save(step, jax.device_get(state),
-                             meta={"epoch": epoch, "seed": tcfg.seed})
-            epoch += 1
-    mgr.save(step, jax.device_get(state),
-             meta={"epoch": epoch, "seed": tcfg.seed}, block=True)
+    while step < args.steps:
+        try:
+            with compat.set_mesh(mesh):
+                while step < args.steps:
+                    consumed = 0
+                    for raw in loader.iter_epoch(epoch):
+                        consumed += 1
+                        if consumed <= batch_in_epoch:
+                            continue          # resume mid-epoch: skip
+                        if step >= args.steps:
+                            break
+                        # hetsampler pads the *labels*: inputs are the
+                        # shifted view
+                        batch = {
+                            "inputs": jnp.asarray(
+                                raw["inputs"][:, :args.seq_len]),
+                            "labels": jnp.asarray(
+                                raw["labels"][:, :args.seq_len]),
+                            "weights": jnp.asarray(
+                                raw["weights"][:, :args.seq_len]),
+                        }
+                        batch = jax.device_put(batch, bspecs)
+                        t0 = time.time()
+                        state, metrics = step_fn(state, batch)
+                        loss = float(metrics["loss"])
+                        dt = time.time() - t0
+                        losses.append(loss)
+                        step += 1
+                        batch_in_epoch = consumed
+                        # per-rank step times: on real fleets each host
+                        # reports; here every rank shares the host clock.
+                        # --kill-pod stops the victim's reports.
+                        times = [dt] * n_dp
+                        if kill is not None and step >= kill[1]:
+                            for r in range(n_dp):
+                                if r // topo.data_per_pod == kill[0]:
+                                    times[r] = None
+                        monitor.observe(times)
+                        if monitor.should_replan():
+                            plan = monitor.replan(plan)  # RemeshRequired
+                            sampler.set_plan(plan)
+                        if step % args.log_every == 0:
+                            print(f"[train] step {step:5d} loss "
+                                  f"{loss:.4f} ({dt * 1e3:.0f} ms)")
+                        if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
+                            mgr.save(step, jax.device_get(state),
+                                     meta=save_meta())
+                    if step >= args.steps:
+                        break
+                    epoch += 1
+                    batch_in_epoch = 0
+        except RemeshRequired as e:
+            mgr.wait()                     # flush any in-flight write
+            if mgr.latest_step() is None:
+                raise SystemExit(
+                    f"[train] remesh required ({e}) but no checkpoint "
+                    f"exists to restart from — set --ckpt-every") from e
+            dead = set(monitor.dead_ranks().tolist())
+            dpp = topo.data_per_pod
+            alive = [p for p in range(topo.pods)
+                     if not all(r in dead
+                                for r in range(p * dpp, (p + 1) * dpp))]
+            caps = tcfg.het.capacities
+            caps_per_pod = ([float(np.mean(caps[p * dpp:(p + 1) * dpp]))
+                             for p in range(topo.pods)] if caps else None)
+            decision = elastic.plan_remesh(
+                topo, alive, plan.global_rows, caps_per_pod,
+                round_buffer_to=max(tcfg.het.accum_steps, 1))
+            print(f"[train] remesh: {decision.reason}")
+            if not decision.restart_required:
+                # every pod still has live ranks, yet soft replanning
+                # just FAILED (that is what raised RemeshRequired) —
+                # re-planning from static capacities would assign real
+                # rows to the dead ranks and loop forever. Re-mesh
+                # granularity is whole pods; escalate loudly.
+                raise SystemExit(
+                    f"[train] ranks {sorted(dead)} are dead but no "
+                    f"whole pod is lost, and soft replanning cannot "
+                    f"absorb them ({e}); shrink the global batch or "
+                    f"drain the affected pod") from e
+            if not elastic.validate_resume_equivalence(plan,
+                                                       decision.plan):
+                raise SystemExit(
+                    "[train] remesh produced a plan that consumes a "
+                    "different global record stream") from e
+            topo = decision.topology
+            mesh = mesh_for_topology(topo)
+            plan = decision.plan
+            n_dp = dp_size(mesh)
+            # capacities were indexed by the OLD rank numbering — after
+            # the re-mesh the survivors are renumbered, so the stale
+            # list would skew any later replan; the plan from
+            # plan_remesh is authoritative now. accum_steps scales to
+            # preserve the per-microbatch grid across the DP-width
+            # change: the resumed trajectory stays bit-identical (see
+            # elastic.RemeshDecision.accum_scale).
+            tcfg = dataclasses.replace(
+                tcfg, het=dataclasses.replace(
+                    tcfg.het, capacities=(),
+                    accum_steps=(tcfg.het.accum_steps *
+                                 decision.accum_scale)))
+            if decision.accum_scale > 1:
+                print(f"[train] accum_steps scaled x"
+                      f"{decision.accum_scale} to preserve the "
+                      f"microbatch grid")
+            step_fn, sampler, loader, bspecs, fmt = build_runtime(mesh,
+                                                                  plan)
+            state, (step, epoch, batch_in_epoch) = restore_state(mesh,
+                                                                 plan)
+            # the rollback discards the post-checkpoint trajectory:
+            # drop its loss entries so the final summary reports only
+            # steps that are part of the resumed run
+            del losses[max(step - start_step, 0):]
+            monitor = StragglerMonitor(
+                num_ranks=n_dp, ema_decay=tcfg.het.straggler_ema,
+                replan_interval=tcfg.het.replan_interval)
+            kill = None                    # the dead pod is gone
+            print(f"[train] re-meshed to "
+                  f"{dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+                  f"resumed step {step} (epoch {epoch}, batch "
+                  f"{batch_in_epoch})")
+    mgr.save(step, jax.device_get(state), meta=save_meta(), block=True)
     wall = time.time() - t_start
+    if not losses:                       # resumed an already-done run
+        print(f"[train] nothing to do: checkpoint already at step "
+              f"{step} >= --steps {args.steps}")
+        return {"steps": step, "wall_s": wall}
     print(f"[train] done: {step - start_step} steps in {wall:.1f}s, "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     return {"steps": step, "wall_s": wall, "first_loss": losses[0],
@@ -207,10 +382,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--replan-interval", type=int, default=100,
+                    help="steps between straggler capacity replans")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/hetseq_ckpt")
     ap.add_argument("--data-dir", default="/tmp/hetseq_data")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--kill-pod", default="",
+                    help="fault injection 'P@S': pod P stops reporting "
+                         "from global step S (exercises the elastic "
+                         "remesh restart)")
     args = ap.parse_args()
     train(args)
 

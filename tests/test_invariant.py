@@ -100,6 +100,7 @@ def test_pack_unpack_roundtrip():
 # --------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @given(
     caps=st.lists(st.integers(min_value=0, max_value=4),
                   min_size=2, max_size=5).filter(lambda c: sum(c) > 0),
@@ -152,6 +153,7 @@ def test_invariant_with_empty_worker(small_model):
                                    atol=5e-6)
 
 
+@pytest.mark.slow
 @given(accum=st.sampled_from([1, 2, 4]),
        seed=st.integers(min_value=0, max_value=1000))
 @settings(max_examples=10, deadline=None)
