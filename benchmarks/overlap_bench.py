@@ -34,6 +34,21 @@ modes but the acceptance invariant is on the model (checked loudly in
 be strictly below modeled serial, and the fused pipeline must be
 bit-identical (fp32) to the monolithic reduce+update.
 
+Backward overlap (``HetConfig.overlap="backward"``): a third schedule
+flushes buckets DURING backprop — each bucket's exchange is issued the
+moment its last contributing layer's cotangent lands
+(core/buckets.py::bucket_readiness + BucketFlushPipeline). The bench
+builds a synthetic LAYERED gradient tree (head / stacked layers /
+embedding, the uniform-stack partition), derives the readiness
+schedule, and models the bwd+link timeline: per-stage backward compute
+from HBM-touched bytes, per-bucket link occupancy gated on the
+bucket's readiness stage. The acceptance invariant is that the modeled
+backward-overlap step time is STRICTLY below the after-backward
+("buckets") pipeline — the link works while the backward still
+computes instead of idling through it — and that the flush-ordered
+pipeline is bit-identical to the monolithic exchange (readiness order
+must not change values).
+
 Emits ``BENCH_overlap.json`` (``--out`` to relocate).
 """
 from __future__ import annotations
@@ -116,6 +131,202 @@ def modeled_timeline(layout: bkt.BucketLayout, ranks: int, *,
     }
 
 
+# modeled backward compute: recompute-forward + backward passes over a
+# stage's parameter bytes (the staged backward is remat-style — each
+# layer's VJP re-reads its params ~BWD_PASSES times against HBM)
+BWD_PASSES = 6.0
+
+
+def synthetic_layered_tree(num_layers: int, d: int,
+                           vocab: int) -> Dict[str, jnp.ndarray]:
+    """A uniform-stack-shaped gradient tree: embedding table, stacked
+    per-layer matrices, head. Mirrors the layer partition the staged
+    backward flushes against (models/transformer.py)."""
+    rng = np.random.default_rng(0)
+
+    def arr(*shape):
+        return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+    return {
+        "embed": arr(vocab, d),
+        "layers": {"attn": arr(num_layers, d, 3 * d),
+                   "mlp_in": arr(num_layers, d, 4 * d),
+                   "mlp_out": arr(num_layers, 4 * d, d)},
+        "head": arr(d, vocab),
+    }
+
+
+def layered_pieces(tree: Dict[str, jnp.ndarray], num_layers: int):
+    """Per-leaf (offset, n, stage) pieces for the synthetic tree — the
+    uniform-stack backward partition: head at stage 0, layer l at
+    stage L - l, embedding at stage L + 1."""
+    L = num_layers
+    pieces = []
+    stage_bytes = [0.0] * (L + 2)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        top = path[0].key
+        n = int(np.prod(leaf.shape))
+        if top == "layers":
+            per = n // L
+            pieces.append([(l * per, per, L - l) for l in range(L)])
+            for l in range(L):
+                stage_bytes[L - l] += per * 4
+        elif top == "embed":
+            pieces.append([(0, n, L + 1)])
+            stage_bytes[L + 1] += n * 4
+        else:
+            pieces.append([(0, n, 0)])
+            stage_bytes[0] += n * 4
+    return pieces, stage_bytes
+
+
+def modeled_backward_timeline(layout: bkt.BucketLayout, ranks: int,
+                              readiness, stage_bytes, *,
+                              compress: bool,
+                              block_size: int = _BLOCK
+                              ) -> Dict[str, Any]:
+    """Bwd+link timeline for the backward-overlap flush schedule.
+
+    The staged backward walks stages 0..S-1 (head, layers back to
+    front, embed) at ``BWD_PASSES`` HBM passes over each stage's
+    parameter bytes; bucket *k*'s send-side prep can start no earlier
+    than ``stage_done[readiness[k]]``, then the standard 3-stage
+    prep | link | update pipeline recurrence applies in flush order.
+    The after-backward ("buckets") pipeline is the SAME recurrence
+    gated on the full backward being done — so the comparison isolates
+    exactly the early-flush win: link time hidden under backward
+    compute.
+    """
+    nb = layout.num_buckets
+    bucket_f32 = layout.bucket_elems * 4
+    t_prep = [(3.0 if compress else 1.0) * bucket_f32 / HBM_BYTES_PER_S
+              ] * nb
+    t_link = [bkt.modeled_bucket_link_bytes(
+        layout, ranks, k, compress=compress, block_size=block_size)
+        / DCN_BYTES_PER_S for k in range(nb)]
+    t_upd = [7.0 * bucket_f32 / HBM_BYTES_PER_S] * nb
+
+    t_bwd = [BWD_PASSES * b / HBM_BYTES_PER_S for b in stage_bytes]
+    stage_done = []
+    t = 0.0
+    for s in range(len(t_bwd)):
+        t += t_bwd[s]
+        stage_done.append(t)
+    bwd_total = t
+
+    def pipeline(ready_at):
+        prep_done = link_done = upd_done = 0.0
+        timeline = []
+        order = sorted(range(nb), key=lambda k: (readiness[k], k))
+        for k in order:
+            prep_start = max(prep_done, ready_at(k))
+            prep_done = prep_start + t_prep[k]
+            link_start = max(link_done, prep_done)
+            link_done = link_start + t_link[k]
+            upd_start = max(upd_done, link_done)
+            upd_done = upd_start + t_upd[k]
+            timeline.append({"bucket": k,
+                             "ready_s": ready_at(k),
+                             "prep_s": [prep_start, prep_done],
+                             "link_s": [link_start, link_done],
+                             "update_s": [upd_start, upd_done]})
+        return upd_done, timeline
+
+    bwd_overlap_total, timeline = pipeline(
+        lambda k: stage_done[readiness[k]])
+    after_backward_total, _ = pipeline(lambda k: bwd_total)
+    return {
+        "bwd_total_s": bwd_total,
+        "backward_overlap_model_s": max(bwd_overlap_total, bwd_total),
+        "after_backward_model_s": after_backward_total,
+        "model_speedup_vs_after_backward":
+            after_backward_total / max(bwd_overlap_total, bwd_total),
+        "link_total_s": sum(t_link),
+        "readiness": list(readiness),
+        "bwd_passes": BWD_PASSES,
+        "timeline": timeline,
+    }
+
+
+def bench_backward(mesh, pods: int, bucket_mb: float, iters: int,
+                   compress: bool, *, num_layers: int = 6, d: int = 64,
+                   vocab: int = 512) -> Dict[str, Any]:
+    """The backward-overlap flush schedule: modeled timeline + a
+    flush-ORDER pipeline run on the host mesh asserting the readiness
+    order cannot change values (bit-identical to the monolithic
+    exchange)."""
+    tree = synthetic_layered_tree(num_layers, d, vocab)
+    layout = bkt.build_layout(tree, bucket_mb=bucket_mb,
+                              multiple_of=pods * _BLOCK)
+    pieces, stage_bytes = layered_pieces(tree, num_layers)
+    readiness = bkt.bucket_readiness(layout, pieces)
+    weights = [1.0, -0.5][:pods]
+    stacked = jax.tree.map(
+        lambda v: jnp.stack([w * v for w in weights]), tree)
+    spec = jax.tree.map(lambda _: NamedSharding(mesh, P("pod")), stacked)
+    stacked = jax.device_put(stacked, spec)
+
+    def serial(gl):
+        g = jax.tree.map(lambda a: a[0], gl)
+        flat = bkt.pack_buckets(g, layout)
+        red, _ = bkt.exchange_buckets(
+            flat, None, axis="pod", axis_size=pods, compress=compress,
+            block_size=_BLOCK, total=layout.total)
+        return red
+
+    def flush_ordered(gl):
+        g = jax.tree.map(lambda a: a[0], gl)
+        flat = bkt.pack_buckets(g, layout)
+        x = flat.reshape(layout.num_buckets, pods, -1)
+        onehot = compat.manual_axis_onehot("pod", pods, tie=flat)
+
+        def prep(k, raw_k):
+            return bkt.prepare_bucket(
+                raw_k, None, compress=compress, block_size=_BLOCK,
+                key=None, impl="reference", interpret=False)
+
+        def exchange(k, prepared):
+            payload, resid1 = prepared
+            return bkt.exchange_prepared_bucket(
+                payload, resid1, axis="pod", axis_size=pods,
+                compress=compress, block_size=_BLOCK, impl="reference",
+                interpret=False, onehot=onehot)
+
+        pipe = bkt.BucketFlushPipeline(readiness, prep, exchange)
+        for stage in range(num_layers + 2):
+            pipe.flush_ready_buckets(stage, lambda k: x[k])
+        outs, _, _ = pipe.finish()
+        return jnp.stack(outs)
+
+    results: Dict[str, Any] = {}
+    outs = {}
+    for name, f in (("serial", serial), ("flush_ordered", flush_ordered)):
+        sm = compat.shard_map(f, mesh=mesh, in_specs=P("pod"),
+                              out_specs=P(), axis_names={"pod"},
+                              check_vma=False)
+        jf = jax.jit(sm)
+        out = jax.block_until_ready(jf(stacked))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = jax.block_until_ready(jf(stacked))
+        results[name] = {"avg_ms": (time.perf_counter() - t0) / iters
+                         * 1e3}
+        outs[name] = out
+    np.testing.assert_array_equal(np.asarray(outs["serial"]),
+                                  np.asarray(outs["flush_ordered"]))
+    results["exact_match"] = True
+    results["model"] = modeled_backward_timeline(
+        layout, pods, readiness, stage_bytes, compress=compress)
+    results["_layout"] = {
+        "total_bytes": layout.total_bytes,
+        "bucket_elems": layout.bucket_elems,
+        "num_buckets": layout.num_buckets,
+        "num_layers": num_layers,
+        "compress": compress,
+    }
+    return results
+
+
 def bench_modes(tree: Dict[str, jnp.ndarray], mesh, pods: int,
                 bucket_mb: float, iters: int,
                 compress: bool) -> Dict[str, Any]:
@@ -195,6 +406,20 @@ def bench_modes(tree: Dict[str, jnp.ndarray], mesh, pods: int,
 
 def check_invariants(res: Dict[str, Any]) -> None:
     """Acceptance invariant — fail loudly on regression."""
+    for mode in ("backward_fp32", "backward_int8"):
+        m = res[mode]["model"]
+        assert res[mode]["exact_match"], (
+            f"{mode}: flush-ordered pipeline diverged from the "
+            f"monolithic exchange")
+        assert (m["backward_overlap_model_s"]
+                < m["after_backward_model_s"]), (
+            f"{mode}: modeled backward-overlap step "
+            f"{m['backward_overlap_model_s']:.3e}s not strictly below "
+            f"the after-backward pipeline "
+            f"{m['after_backward_model_s']:.3e}s")
+        # flushing during backprop can never beat the physical floors
+        assert m["backward_overlap_model_s"] >= m["bwd_total_s"]
+        assert m["backward_overlap_model_s"] >= m["link_total_s"]
     for mode in ("fp32", "int8"):
         nb = res[mode]["_layout"]["num_buckets"]
         assert nb >= 2, (
@@ -226,11 +451,17 @@ def main(quick: bool = False, out: str = "BENCH_overlap.json",
         tree = synthetic_grad_tree(num_leaves=48, scale=96)
         iters = 8
 
+    bwd_kw = (dict(num_layers=4, d=32, vocab=256) if quick
+              else dict(num_layers=8, d=96, vocab=1024))
     res: Dict[str, Any] = {
         "fp32": bench_modes(tree, mesh, pods, bucket_mb, iters,
                             compress=False),
         "int8": bench_modes(tree, mesh, pods, bucket_mb, iters,
                             compress=True),
+        "backward_fp32": bench_backward(mesh, pods, bucket_mb, iters,
+                                        compress=False, **bwd_kw),
+        "backward_int8": bench_backward(mesh, pods, bucket_mb, iters,
+                                        compress=True, **bwd_kw),
     }
     check_invariants(res)
 
@@ -246,12 +477,22 @@ def main(quick: bool = False, out: str = "BENCH_overlap.json",
               f"{m['model_speedup']:13.2f} | "
               f"{res[mode]['serial']['avg_ms']:9.2f} | "
               f"{res[mode]['overlap']['avg_ms']:10.2f} |")
+    print("| backward-overlap | bwd ms | after-bwd pipeline ms | "
+          "bwd-overlap ms | speedup |")
+    for mode in ("backward_fp32", "backward_int8"):
+        m = res[mode]["model"]
+        print(f"| {mode} | {m['bwd_total_s'] * 1e3:6.3f} | "
+              f"{m['after_backward_model_s'] * 1e3:21.3f} | "
+              f"{m['backward_overlap_model_s'] * 1e3:14.3f} | "
+              f"{m['model_speedup_vs_after_backward']:7.2f} |")
     with open(out, "w") as fh:
         json.dump(res, fh, indent=2)
     print(f"[overlap_bench] wrote {out}; modeled overlapped step "
           f"{res['int8']['model']['model_speedup']:.2f}x faster than "
-          f"serial (int8), exact fp32 match with monolithic: "
-          f"{res['fp32']['exact_match']}")
+          f"serial (int8), backward-overlap "
+          f"{res['backward_int8']['model']['model_speedup_vs_after_backward']:.2f}x "
+          f"faster than the after-backward pipeline (int8), exact fp32 "
+          f"match with monolithic: {res['fp32']['exact_match']}")
     return res
 
 

@@ -80,9 +80,14 @@ def main() -> None:
     csv.append(("overlap_bench", ob["fp32"]["overlap"]["avg_ms"] * 1e3,
                 f"model_speedup_int8="
                 f"{ob['int8']['model']['model_speedup']:.2f}x "
+                f"bwd_overlap_int8="
+                f"{ob['backward_int8']['model']['model_speedup_vs_after_backward']:.2f}x "
                 f"exact_fp32={ob['fp32']['exact_match']}"))
 
     if args.quick:
+        from benchmarks import docs_smoke
+        n_cmds = docs_smoke.run_docs_smoke()
+        csv.append(("docs_smoke", 0.0, f"readme_commands={n_cmds}"))
         tier_s = _run_quick_test_tier()
         csv.append(("quick_test_tier", 0.0, f"wall_s={tier_s:.1f}"))
     else:

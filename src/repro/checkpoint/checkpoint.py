@@ -44,6 +44,7 @@ dry-run params are process-local (noted in DESIGN.md §deviations).
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
@@ -57,6 +58,8 @@ from repro.core.capacity import CapacityPlan, plan_from_record, plan_record
 
 _DONE = "_DONE"
 _PLAN_TAG = "__capacity_plan__"
+
+logger = logging.getLogger(__name__)
 
 
 def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
@@ -190,7 +193,8 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, template: Any, step: Optional[int] = None
+    def restore(self, template: Any, step: Optional[int] = None,
+                expected_overlap: Optional[str] = None
                 ) -> Tuple[Any, Dict]:
         """Returns (state shaped like ``template``, meta).
 
@@ -202,6 +206,14 @@ class CheckpointManager:
         ``repack.adapt_arrays`` (bit-exact, see checkpoint/repack.py).
         Template leaves only need ``.shape``/``.dtype`` —
         ShapeDtypeStructs work.
+
+        ``expected_overlap``: the restoring config's
+        ``HetConfig.overlap`` mode. The checkpoint records which mode
+        wrote it (``meta["format"]["overlap"]``); a mismatch still
+        restores — the repack handles the layout translation — but is
+        LOGGED, never silently adapted, because a packed->pytree (or
+        reverse) translation is a real layout change the operator
+        should see.
         """
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -213,5 +225,15 @@ class CheckpointManager:
             arrays = {k: z[k] for k in z.files}
         with open(os.path.join(path, "meta.json")) as fh:
             meta = json.load(fh, object_hook=_meta_hook)
+        fmt = meta.get("format") or {}
+        saved_overlap = fmt.get("overlap")
+        if expected_overlap is not None and saved_overlap is not None \
+                and saved_overlap != expected_overlap:
+            logger.warning(
+                "checkpoint step_%010d was written under HetConfig."
+                "overlap='%s' but is being restored into overlap='%s' "
+                "— optimizer state will be repacked through the flat "
+                "stream (bit-exact; see checkpoint/repack.py)",
+                step, saved_overlap, expected_overlap)
         arrays = repack.adapt_arrays(arrays, template, meta.get("format"))
         return _unflatten_like(template, arrays), meta

@@ -198,60 +198,133 @@ def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]
 # --------------------------------------------------------------------------
 
 
+# Accepted values of the HetConfig mode fields. These constants are the
+# single source of truth: HetConfig.validate() checks membership,
+# launch/steps.py derives its config checks from them, launch/train.py
+# exposes them as CLI choices, and tests/test_config_docs.py asserts the
+# README config matrix agrees with them.
+GRAD_REDUCTION_MODES = ("allreduce", "bucketed_allreduce", "hierarchical")
+OVERLAP_MODES = ("none", "buckets", "backward")
+COMPRESSION_MODES = ("none", "int8")
+QUANTIZE_IMPLS = ("reference", "pallas")
+WEIGHTING_MODES = ("tokens", "samples")
+
+# Which grad_reduction modes the overlap pipelines schedule: overlap is
+# a schedule OF the explicit bucketed engine, so it needs one of these
+# plus bucket_mb > 0.
+EXPLICIT_REDUCTIONS = ("bucketed_allreduce", "hierarchical")
+
+
 @dataclass(frozen=True)
 class HetConfig:
     """HetSeq heterogeneous data-parallel settings.
 
-    ``capacities`` assigns a relative throughput/memory capacity to each DP
-    rank (pod x data position). The capacity planner converts these into
-    per-rank real-row counts; remaining buffer rows are dummy rows with
-    weight 0 (paper: empty/partial batch handling).
+    Fields (one line each — valid values and interactions; see
+    docs/architecture.md for the full narrative):
 
-    ``grad_reduction`` selects the reduction schedule:
-      * "allreduce"          — paper-faithful XLA-automatic reduction;
-      * "bucketed_allreduce" — explicit flat-buffer reduction over the
-        DP axes: grads packed into fixed-size f32 buckets
-        (core/buckets.py), one psum_scatter + one all_gather for the
-        whole tree. Requires ``bucket_mb > 0``;
-      * "hierarchical"       — in-pod automatic (ICI), cross-pod (DCN)
-        explicit, optionally int8-compressed with error feedback.
-
-    ``bucket_mb`` (PyTorch-DDP-style) is the bucket payload in MiB of
-    f32 for the bucketed engine. 0 keeps the legacy per-leaf walk on
-    the hierarchical path (one collective per pytree leaf) — measured
-    against the bucketed engine by benchmarks/reduce_bench.py.
-    ``quantize_impl`` picks the int8 kernels for the compressed
-    exchange: "reference" (pure jnp, portable) or "pallas" (fused TPU
-    kernels: one quantize launch per step over the concatenated bucket
-    stack plus the fused dequant-accumulate receive kernel).
-
-    ``overlap`` schedules the bucketed engine (both explicit reduction
-    modes, requires ``bucket_mb > 0``):
-      * "none"    — monolithic: pack -> 2 collectives -> unpack ->
-        tree-wide optimizer update, strictly serial;
-      * "buckets" — double-buffered per-bucket pipeline: bucket k+1's
-        quantize/pack overlaps bucket k's in-flight exchange, and the
-        flat-view optimizer update for bucket k is fused into the
-        pipeline the moment its reduced payload lands (AdamW moments
-        then live packed as one (num_buckets, bucket_elems) array in
-        TrainState, replicated over the reduction axes). Global-norm
-        clipping (and LAMB's per-layer trust ratios) need every
-        bucket's reduced payload, so those configs keep the pipelined
-        exchange but apply the flat update after a barrier.
-        benchmarks/overlap_bench.py models the pipeline timeline.
+    ``capacities``: relative throughput per DP rank (pod x data
+        position); empty tuple = homogeneous. The capacity planner
+        turns these into per-rank real-row counts, remaining buffer
+        rows are weight-0 dummies (paper M1/M3).
+    ``weighting``: "tokens" | "samples" — what a unit of loss weight
+        counts (paper M3 aggregation contract).
+    ``grad_reduction``: "allreduce" (paper-faithful, XLA-automatic) |
+        "bucketed_allreduce" (explicit flat-buffer reduction over the
+        DP axes; requires ``bucket_mb > 0``) | "hierarchical" (in-pod
+        automatic over ICI, cross-pod DCN leg explicit, optionally
+        compressed; bucketed when ``bucket_mb > 0``).
+    ``compression``: "none" | "int8" — cross-pod payload encoding;
+        only consulted by "hierarchical" (other modes reduce fp32).
+    ``error_feedback``: keep per-rank residuals of the int8 quantizer
+        (both stages) and fold them into the next step; only active for
+        hierarchical + int8 on a multi-pod mesh.
+    ``bucket_mb``: bucket payload in MiB of f32 for the bucketed
+        engine (PyTorch-DDP-style knob); 0 keeps the legacy per-leaf
+        walk and is invalid with "bucketed_allreduce" or any overlap.
+    ``quantize_impl``: "reference" (pure jnp, portable) | "pallas"
+        (fused TPU kernels) for the int8 exchange kernels.
+    ``overlap``: "none" (monolithic: pack -> 2 collectives -> unpack
+        -> tree-wide update) | "buckets" (double-buffered per-bucket
+        pipeline fused with flat-view optimizer updates, after the
+        backward pass) | "backward" (beyond "buckets": buckets flush
+        DURING backprop as their last contributing layer's cotangent
+        lands; requires ``ModelConfig.scan_layers=False`` and a
+        uniform-stack architecture). Both pipelines require an
+        explicit ``grad_reduction`` and ``bucket_mb > 0``; global-norm
+        clipping and LAMB keep the pipelined exchange but update
+        behind a barrier.
+    ``accum_steps``: gradient-accumulation microbatch count (paper M4
+        delayed update); >= 1.
+    ``straggler_ema``: EMA decay of per-rank step-time tracking in
+        [0, 1) (core/straggler.py).
+    ``replan_interval``: steps between soft capacity replans; >= 1.
     """
 
     capacities: Tuple[float, ...] = ()      # empty => homogeneous
     weighting: str = "tokens"               # tokens | samples
-    grad_reduction: str = "allreduce"       # allreduce | bucketed_allreduce | hierarchical
-    compression: str = "none"               # none | int8 | bf16
+    grad_reduction: str = "allreduce"       # see GRAD_REDUCTION_MODES
+    compression: str = "none"               # see COMPRESSION_MODES
     error_feedback: bool = True
     bucket_mb: float = 0.0                  # >0 => bucketed flat-buffer engine
-    quantize_impl: str = "reference"        # reference | pallas
-    overlap: str = "none"                   # none | buckets (pipelined)
+    quantize_impl: str = "reference"        # see QUANTIZE_IMPLS
+    overlap: str = "none"                   # see OVERLAP_MODES
     accum_steps: int = 1                    # delayed update (paper M4)
     straggler_ema: float = 0.9
     replan_interval: int = 100              # steps between capacity replans
+
+    def validate(self) -> "HetConfig":
+        """Mesh-independent config validation. Raises ``ValueError``
+        with an actionable message instead of failing deep in the
+        pipeline; mesh/model-dependent checks (reduction axes, stack
+        plan, scan_layers) live in ``launch/steps.py`` and run at
+        ``build_train_step`` time. Returns self for chaining."""
+        def member(name, value, allowed):
+            if value not in allowed:
+                raise ValueError(
+                    f"HetConfig.{name}='{value}' is not one of "
+                    f"{' | '.join(allowed)}")
+
+        member("weighting", self.weighting, WEIGHTING_MODES)
+        member("grad_reduction", self.grad_reduction, GRAD_REDUCTION_MODES)
+        member("compression", self.compression, COMPRESSION_MODES)
+        member("quantize_impl", self.quantize_impl, QUANTIZE_IMPLS)
+        member("overlap", self.overlap, OVERLAP_MODES)
+        if self.bucket_mb < 0:
+            raise ValueError(
+                f"HetConfig.bucket_mb must be >= 0, got {self.bucket_mb}")
+        if self.accum_steps < 1:
+            raise ValueError(
+                f"HetConfig.accum_steps must be >= 1, got "
+                f"{self.accum_steps}")
+        if not 0.0 <= self.straggler_ema < 1.0:
+            raise ValueError(
+                f"HetConfig.straggler_ema must be in [0, 1), got "
+                f"{self.straggler_ema}")
+        if self.replan_interval < 1:
+            raise ValueError(
+                f"HetConfig.replan_interval must be >= 1, got "
+                f"{self.replan_interval}")
+        if any(c < 0 for c in self.capacities):
+            raise ValueError(
+                f"HetConfig.capacities must be non-negative, got "
+                f"{self.capacities}")
+        if self.grad_reduction == "bucketed_allreduce" \
+                and self.bucket_mb <= 0:
+            raise ValueError(
+                "HetConfig.grad_reduction='bucketed_allreduce' needs "
+                "bucket_mb > 0 (the explicit flat-buffer engine)")
+        if self.overlap != "none":
+            if self.grad_reduction not in EXPLICIT_REDUCTIONS:
+                raise ValueError(
+                    f"HetConfig.overlap='{self.overlap}' needs an "
+                    f"explicit reduction "
+                    f"({' | '.join(EXPLICIT_REDUCTIONS)}), not "
+                    f"'{self.grad_reduction}'")
+            if self.bucket_mb <= 0:
+                raise ValueError(
+                    f"HetConfig.overlap='{self.overlap}' needs "
+                    f"bucket_mb > 0 (a bucket grid to pipeline over)")
+        return self
 
 
 @dataclass(frozen=True)
@@ -305,6 +378,34 @@ class MeshConfig:
 
 @dataclass(frozen=True)
 class TrainConfig:
+    """One full training-run configuration.
+
+    Fields (one line each):
+
+    ``model``: the :class:`ModelConfig` backbone being trained.
+    ``shape``: the (seq_len, global_batch) training cell; kind "train".
+    ``het``: the :class:`HetConfig` heterogeneous-DP settings — run
+        ``het.validate()`` / ``build_train_step`` for the interaction
+        rules (overlap needs bucket_mb > 0, "backward" additionally
+        needs ``model.scan_layers=False`` and a uniform stack, ...).
+    ``optimizer``: :class:`OptimizerConfig`; name "adamw" | "lamb"
+        (LAMB and ``grad_clip > 0`` force the overlap pipelines onto
+        the barrier update path).
+    ``mesh``: logical mesh description; DP spans (pod, data), TP uses
+        "model".
+    ``seed``: global RNG seed — one key IS the broadcast (paper M8).
+    ``zero1``: shard optimizer state over DP like params (beyond
+        paper); ignored by the overlap modes (packed moments are
+        replicated over the reduction axes).
+    ``label_smoothing``: CE label smoothing in [0, 1); the paper's
+        translation task uses 0.1.
+    ``log_every``: steps between progress log lines; >= 1.
+    ``ckpt_every``: steps between checkpoints; 0 disables periodic
+        saves (a final save still happens in the driver).
+    ``ckpt_dir``: checkpoint directory (versioned step_<N> subdirs).
+    ``ckpt_keep``: checkpoints retained by rotation; 0 keeps all.
+    """
+
     model: ModelConfig
     shape: ShapeConfig = TRAIN_4K
     het: HetConfig = field(default_factory=HetConfig)

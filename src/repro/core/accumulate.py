@@ -57,6 +57,37 @@ def scan_accumulate(
     return g_sum, o_sum, w_sum
 
 
+def unrolled_accumulate(
+    grad_fn: Callable[[Any, Dict], Tuple[Tuple[jnp.ndarray, jnp.ndarray],
+                                         Any]],
+    params: Any,
+    microbatches: Dict[str, jnp.ndarray],
+    carry_dtype: Optional[Callable[[Any], Any]] = None,
+) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
+    """``scan_accumulate`` as an unrolled python loop — same math, same
+    add order, same carry dtypes, accum-times-larger HLO.
+
+    Used when ``ModelConfig.scan_layers=False``: XLA compiles dots
+    inside a scan body differently from top-level dots (last-bit fp
+    differences), so the fully-unrolled program class — which the
+    backward-overlap staged pipeline needs — keeps its accumulation
+    unrolled too, making ``overlap="backward"`` bit-identical to the
+    monolithic path at any ``accum_steps``.
+    """
+    dtype_of = carry_dtype or (lambda p: jnp.float32)
+    accum = jax.tree.leaves(microbatches)[0].shape[0]
+    g_acc = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype_of(p)), params)
+    o_acc = jnp.zeros((), jnp.float32)
+    w_acc = jnp.zeros((), jnp.float32)
+    for i in range(accum):
+        mb = jax.tree.map(lambda a: a[i], microbatches)
+        (o, w), g = grad_fn(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+        o_acc = o_acc + o
+        w_acc = w_acc + w
+    return g_acc, o_acc, w_acc
+
+
 def accumulate_grads(
     loss_fn: Callable[..., Tuple[jnp.ndarray, jnp.ndarray, Dict]],
     params: Any,

@@ -703,6 +703,145 @@ def exchange_buckets_overlapped(
 
 
 # --------------------------------------------------------------------------
+# backward-overlap readiness schedule (HetConfig.overlap="backward")
+#
+# The per-bucket pipeline above starts after the full gradient tree
+# exists — the DCN link idles through the entire backward pass. The
+# flush pipeline instead issues each bucket's exchange the moment its
+# last contributing gradient lands during backprop. Readiness is a
+# pure layout property: each leaf (or per-layer slice of a stacked
+# leaf) occupies a contiguous range of the flat stream (the same
+# segment structure ``segment_ids`` exposes), and each range is
+# annotated with the backward stage at which its gradient becomes
+# final (models/transformer.py stage numbering: 0 = head, s = layer
+# L-s, L+1 = embed). A bucket is ready at the LATEST stage of any
+# element it contains.
+# --------------------------------------------------------------------------
+
+
+def bucket_readiness(layout: BucketLayout,
+                     leaf_pieces: Sequence[Sequence[Tuple[int, int, int]]]
+                     ) -> Tuple[int, ...]:
+    """Per-bucket backward stage at which the bucket is flushable.
+
+    ``leaf_pieces[i]`` describes leaf *i* (in ``layout`` flatten order)
+    as ``(offset_within_leaf, n_elems, stage)`` ranges — one piece for
+    an ordinary leaf, one per layer for a stacked ``(L, ...)`` leaf
+    (the model's layer partition). Bucket *k*'s readiness is the max
+    stage over the real elements in ``[k*bucket_elems, (k+1)*
+    bucket_elems)``; padding never delays a flush. Pieces must tile
+    each leaf exactly.
+    """
+    if len(leaf_pieces) != len(layout.sizes):
+        raise ValueError(
+            f"leaf_pieces has {len(leaf_pieces)} entries, layout has "
+            f"{len(layout.sizes)} leaves")
+    ready = [0] * layout.num_buckets
+    be = layout.bucket_elems
+    for i, (off, size) in enumerate(zip(layout.offsets, layout.sizes)):
+        covered = 0
+        for p_off, n, stage in leaf_pieces[i]:
+            if p_off != covered:
+                raise ValueError(
+                    f"leaf {i}: pieces must tile the leaf contiguously "
+                    f"(expected offset {covered}, got {p_off})")
+            covered += n
+            start = off + p_off
+            for k in range(start // be, (start + n - 1) // be + 1):
+                if stage > ready[k]:
+                    ready[k] = stage
+        if covered != size:
+            raise ValueError(
+                f"leaf {i}: pieces cover {covered} of {size} elements")
+    return tuple(ready)
+
+
+class BucketFlushPipeline:
+    """Double-buffered per-bucket exchange driven by backward-stage
+    readiness — the ``overlap="backward"`` schedule.
+
+    Same dependency structure as :func:`run_overlapped_pipeline`
+    (bucket *j*'s send-side prep is issued before the previous ready
+    bucket's exchange, so the prep overlaps the in-flight collective),
+    but buckets are fed in READINESS order as the staged backward
+    lands their gradients, instead of 0..nb-1 after the full tree
+    exists. The driver is plain python over traced values: the staged
+    backward is an unrolled program (models/transformer.py), so the
+    flush schedule is static.
+
+    ``prep(k, raw_k)`` builds bucket *k*'s wire-ready state (quantize/
+    pack — no collectives); ``exchange(k, prepared)`` runs its
+    collective leg(s) and returns ``(reduced_k, new_err_k | None)``;
+    ``bucket_fn(carry, reduced_k, k) -> (carry, out_k)`` consumes each
+    reduced bucket the moment it lands (the train step fuses the
+    flat-view optimizer update here). Per-bucket results are bitwise
+    identical to the after-backward pipeline — each bucket's exchange
+    is independent, so the issue ORDER cannot change values.
+    """
+
+    def __init__(self, readiness: Sequence[int], prep, exchange, *,
+                 bucket_fn=None, fn_carry: Any = None):
+        self.readiness = tuple(int(s) for s in readiness)
+        self.num_buckets = len(self.readiness)
+        self._prep = prep
+        self._exchange = exchange
+        self._bucket_fn = bucket_fn or (
+            lambda carry, red, k: (carry, red))
+        self.fn_carry = fn_carry
+        self._by_stage: Dict[int, list] = {}
+        for k, s in enumerate(self.readiness):
+            self._by_stage.setdefault(s, []).append(k)
+        self._pending: Optional[Tuple[int, Any]] = None
+        self._outs: Dict[int, Any] = {}
+        self._errs: Dict[int, Any] = {}
+        self._flushed: set = set()
+
+    def _exchange_pending(self) -> None:
+        k, prepared = self._pending
+        self._pending = None
+        red_k, nerr_k = self._exchange(k, prepared)
+        self.fn_carry, out_k = self._bucket_fn(self.fn_carry, red_k, k)
+        self._outs[k] = out_k
+        if nerr_k is not None:
+            self._errs[k] = nerr_k
+
+    def flush_ready_buckets(self, stage: int, raw_of) -> None:
+        """Feed every bucket whose readiness == ``stage``.
+
+        ``raw_of(k)`` returns bucket *k*'s raw payload (the caller's
+        stream buffer slice) at flush time. For each ready bucket the
+        pipeline preps it FIRST, then exchanges the previously prepped
+        bucket — the double buffer: prep *j+1* is issued while bucket
+        *j*'s exchange is (logically) in flight.
+        """
+        for k in self._by_stage.get(int(stage), ()):
+            if k in self._flushed:
+                raise ValueError(f"bucket {k} flushed twice")
+            self._flushed.add(k)
+            nxt = (k, self._prep(k, raw_of(k)))
+            if self._pending is not None:
+                self._exchange_pending()
+            self._pending = nxt
+
+    def finish(self) -> Tuple[list, Optional[list], Any]:
+        """Exchange the last prepped bucket and assemble results in
+        BUCKET-INDEX order (the flush order was readiness order).
+        Returns (outs[k] list, errs[k] list or None, bucket_fn carry).
+        """
+        if self._pending is not None:
+            self._exchange_pending()
+        if len(self._flushed) != self.num_buckets:
+            missing = sorted(set(range(self.num_buckets)) - self._flushed)
+            raise ValueError(
+                f"finish() before buckets {missing} were flushed — the "
+                f"staged backward must visit every readiness stage")
+        outs = [self._outs[k] for k in range(self.num_buckets)]
+        errs = ([self._errs[k] for k in range(self.num_buckets)]
+                if self._errs else None)
+        return outs, errs, self.fn_carry
+
+
+# --------------------------------------------------------------------------
 # analytic link-byte model (for §Roofline and the reduction benchmark)
 # --------------------------------------------------------------------------
 

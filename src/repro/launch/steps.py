@@ -43,6 +43,7 @@ allocation ever happens.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -96,28 +97,85 @@ def _err_enabled(tcfg: TrainConfig, mesh: Mesh) -> bool:
 
 
 def _overlap_enabled(tcfg: TrainConfig, mesh: Mesh) -> bool:
-    """Whether this config runs the fused per-bucket pipeline.
+    """Whether this config runs a fused per-bucket pipeline
+    (``overlap`` in {"buckets", "backward"}).
 
     Overlap is a schedule of the bucketed engine, so it needs an
-    explicit reduction mode with a bucket layout to pipeline over.
+    explicit reduction mode with a bucket layout to pipeline over
+    (``HetConfig.validate`` raises on misconfiguration); a mesh with
+    no reduction axes silently falls back to the non-overlap path.
     """
+    tcfg.het.validate()
     if tcfg.het.overlap == "none":
         return False
-    if tcfg.het.overlap != "buckets":
-        raise ValueError(f"unknown HetConfig.overlap "
-                         f"'{tcfg.het.overlap}' (none | buckets)")
-    if tcfg.het.grad_reduction not in ("bucketed_allreduce",
-                                       "hierarchical"):
-        raise ValueError(
-            "HetConfig.overlap='buckets' needs an explicit reduction "
-            f"(bucketed_allreduce | hierarchical), not "
-            f"'{tcfg.het.grad_reduction}'")
-    if tcfg.het.bucket_mb <= 0:
-        raise ValueError(
-            "HetConfig.overlap='buckets' needs bucket_mb > 0")
     if not _reduce_axes(tcfg, mesh):
         return False               # no reduction axes on this mesh
     return True
+
+
+def validate_train_config(model: Model, tcfg: TrainConfig,
+                          mesh: Mesh) -> None:
+    """Full config validation at ``build_train_step`` time.
+
+    Mesh-independent rules live in ``HetConfig.validate``; this adds
+    the mesh/model-dependent rules so misconfigurations raise one
+    clear ``ValueError`` up front instead of failing deep in the
+    pipeline. Also used by ``launch/train.py --dry-run``.
+    """
+    from repro.models import transformer as tr
+
+    het = tcfg.het.validate()
+    if not 0.0 <= tcfg.label_smoothing < 1.0:
+        raise ValueError(
+            f"TrainConfig.label_smoothing must be in [0, 1), got "
+            f"{tcfg.label_smoothing}")
+    if het.grad_reduction == "bucketed_allreduce" \
+            and not mesh_dp_axes(mesh):
+        raise ValueError(
+            "grad_reduction='bucketed_allreduce' needs a mesh with "
+            f"data-parallel axes; got {mesh.axis_names}")
+    if het.overlap == "backward" and _reduce_axes(tcfg, mesh):
+        if not tr.supports_staged_backward(model.cfg):
+            raise ValueError(
+                "HetConfig.overlap='backward' stages the backward over "
+                "the uniform block stack (dense | moe | mla); stack "
+                f"plan '{tr.stack_plan(model.cfg)}' of "
+                f"'{model.cfg.name}' is not supported — use "
+                "overlap='buckets'")
+        if model.cfg.scan_layers:
+            raise ValueError(
+                "HetConfig.overlap='backward' needs ModelConfig."
+                "scan_layers=False: the staged layer-by-layer backward "
+                "is an unrolled program, and bit-exactness with the "
+                "monolithic path requires the monolithic stack "
+                "unrolled too (launch/train.py: --no-scan-layers)")
+
+
+def _flat_barrier_update(pb, red, m, v, lr_step, ocfg, lr, *, inv_w,
+                         dmask, segs, n_leaves):
+    """Whole-stack flat optimizer update behind the barrier.
+
+    Shared by the after-backward ("buckets") and backward-overlap
+    pipelines for configs whose statistics need every reduced bucket
+    (global-norm clipping, LAMB trust ratios). Returns
+    (new_pb, new_m, new_v, gnorm, mean trust ratio).
+    """
+    gsc = red * inv_w
+    gnorm = jnp.sqrt(jnp.sum(gsc * gsc))
+    cs = (jnp.minimum(1.0, ocfg.grad_clip /
+                      jnp.maximum(gnorm, 1e-9))
+          if ocfg.grad_clip > 0 else None)
+    if ocfg.name == "lamb":
+        new_pb, new_m, new_v, trust = lamb.apply_update_flat(
+            pb, gsc, m, v, lr_step, ocfg, lr,
+            decay_mask=dmask, seg_ids=segs,
+            num_leaves=n_leaves, clip_scale=cs)
+    else:
+        new_pb, new_m, new_v = adam.apply_update_flat(
+            pb, gsc, m, v, lr_step, ocfg, lr,
+            decay_mask=dmask, clip_scale=cs)
+        trust = jnp.ones((), jnp.float32)
+    return new_pb, new_m, new_v, gnorm, trust
 
 
 def _reduce_axes(tcfg: TrainConfig, mesh: Mesh) -> Tuple[str, ...]:
@@ -161,7 +219,11 @@ def checkpoint_format(model: Model, tcfg: TrainConfig, mesh: Mesh) -> Dict:
 
     fmt: Dict[str, Any] = {"version": repack.FORMAT_VERSION,
                            "state": "pytree", "packed_fields": [],
-                           "layout": None}
+                           "layout": None,
+                           # which HetConfig.overlap mode wrote this
+                           # checkpoint — restore logs (never silently
+                           # adapts) when the restore target differs
+                           "overlap": tcfg.het.overlap}
     if _overlap_enabled(tcfg, mesh):
         lo = bucket_layout(model, tcfg, mesh)
         params_shape = jax.eval_shape(model.init_params,
@@ -420,6 +482,383 @@ def _reduce_bucketed(
 
 
 # --------------------------------------------------------------------------
+# backward-overlap step (HetConfig.overlap="backward")
+# --------------------------------------------------------------------------
+
+
+def _path_top(entry) -> str:
+    """Top-level key of a tree_flatten_with_path path entry."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def _staged_leaf_pieces(params_shape: Any, cfg: ModelConfig):
+    """Per-leaf ``(offset_within_leaf, n, backward_stage)`` pieces.
+
+    The model's layer partition mapped onto the flat stream: stacked
+    ``layers`` leaves split into per-layer slices landing back to
+    front (layer *l* at stage ``L - l``), the head leaves at stage 0,
+    the embedding table last (stage ``L + 1`` — a tied table also
+    receives a head-stage contribution, so its grad is only final at
+    the end). Feeds ``core/buckets.py::bucket_readiness``.
+    """
+    from repro.models import transformer as tr
+
+    L = cfg.num_layers
+    head_keys = set(tr.head_param_keys(cfg))
+    pieces = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            params_shape)[0]:
+        n = int(math.prod(leaf.shape)) if leaf.shape else 1
+        top = _path_top(path[0])
+        if top == "layers":
+            if n % L:
+                raise ValueError(
+                    f"stacked leaf {jax.tree_util.keystr(path)} of "
+                    f"{n} elements does not split into {L} layers")
+            per = n // L
+            pieces.append([(l * per, per, L - l) for l in range(L)])
+        elif top == "embed":
+            pieces.append([(0, n, L + 1)])
+        elif top in head_keys:
+            pieces.append([(0, n, 0)])
+        else:
+            raise ValueError(
+                f"overlap='backward': unexpected param subtree "
+                f"'{top}' (uniform stack expects embed / final_norm / "
+                f"lm_head / layers)")
+    return pieces
+
+
+def _build_backward_overlap_step(model: Model, tcfg: TrainConfig,
+                                 mesh: Mesh, *, layout: bkt.BucketLayout,
+                                 hier: bool, compress: str,
+                                 use_err: bool, fused_stream: bool):
+    """The ``overlap="backward"`` train step: flush gradient buckets
+    DURING backprop instead of after it.
+
+    Structure (identical on current jax and the old-jaxlib compat
+    stack): the batch is reshaped rank-major and every backward stage
+    is a vmapped per-layer VJP in plain SPMD at the TOP level of the
+    jitted program (models/transformer.py staged segments — requires
+    ``scan_layers=False`` so the monolithic comparison path compiles
+    the same unrolled dots), while each bucket's two-collective
+    exchange runs in its own small shard_map(manual) region, issued
+    the moment the bucket's last contributing stage lands
+    (core/buckets.py::BucketFlushPipeline, readiness derived from the
+    layer partition). The program-order interleaving of exchange
+    regions with the remaining backward stages is what hands the
+    runtime the overlap; the CPU host mesh executes collectives
+    eagerly, so the modeled bwd+link timeline in
+    benchmarks/overlap_bench.py is the claim — exactly as for
+    ``overlap="buckets"``.
+
+    Exactness: fp32 with ``grad_clip=0`` is bit-identical to the
+    monolithic path (same config, ``overlap="none"``) — per-bucket
+    exchanges match the monolithic exchange slice-for-slice and the
+    flat AdamW stream matches the tree update (tests/test_overlap.py).
+    Global-norm clip and LAMB keep the in-backward pipelined exchange
+    but apply the flat update behind a barrier. Gradient accumulation
+    stages every microbatch's backward and flushes only during the
+    last one (the bucket is final only then); the accumulator is the
+    fp32 stream buffer, so bf16-carry configs differ from the
+    monolithic bf16 carry by that last rounding step (documented
+    trade).
+    """
+    from repro.models import transformer as tr
+
+    cfg = model.cfg
+    ocfg = tcfg.optimizer
+    accum = max(1, tcfg.het.accum_steps)
+    q_impl = tcfg.het.quantize_impl
+    dp = mesh_dp_axes(mesh)
+    n_dp = dp_size(mesh)
+    n_pods = mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+    L = cfg.num_layers
+    ranks = n_pods if hier else n_dp
+    inner_dp = (n_dp // n_pods) if hier else 1
+    red_axis: Any = "pod" if hier else (dp if len(dp) > 1 else dp[0])
+    axis_set = {"pod"} if hier else set(dp)
+    rank_spec = P("pod", "data") if hier else P(dp)
+    buf_spec = P("pod") if hier else P(dp if len(dp) > 1 else dp[0])
+    nb, be = layout.num_buckets, layout.bucket_elems
+    shard = be // ranks
+    compress_flag = compress != "none"
+    dmask = bkt.decay_mask(layout)
+    segs = bkt.segment_ids(layout) if ocfg.name == "lamb" else None
+    n_leaves = len(layout.sizes)
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    readiness = bkt.bucket_readiness(
+        layout, _staged_leaf_pieces(params_shape, cfg))
+    token_frontend = cfg.frontend == "token"
+    inner_ctx = ParallelCtx(mesh=mesh,
+                            dp_axes=("data",) if hier else (),
+                            tp_axis=tp_axis(mesh))
+    seg = tr.staged_uniform_segments(
+        cfg, inner_ctx, label_smoothing=tcfg.label_smoothing)
+    embed_fn, layer_fn = seg["embed_fn"], seg["layer_fn"]
+    head_fn, head_keys = seg["head_fn"], seg["head_keys"]
+
+    # stream-offset bookkeeping per top-level subtree, flatten order
+    subtree_slots: Dict[str, list] = {}
+    for (path, _), off, size in zip(
+            jax.tree_util.tree_flatten_with_path(params_shape)[0],
+            layout.offsets, layout.sizes):
+        subtree_slots.setdefault(_path_top(path[0]), []).append(
+            (off, size))
+
+    def scatter_subtree(buf, top, grads, layer=None):
+        """Scatter-add a landed grad subtree into the stream buffer."""
+        leaves = jax.tree.leaves(grads)
+        # zero-leaf subtrees (non-parametric norms) never reach the
+        # stream
+        slots = subtree_slots.get(top, [])
+        assert len(leaves) == len(slots), (top, len(leaves), len(slots))
+        for g, (off, size) in zip(leaves, slots):
+            if layer is not None:
+                per = size // L
+                off, size = off + layer * per, per
+            buf = buf.at[:, off:off + size].add(
+                g.reshape(ranks, size).astype(jnp.float32))
+        return buf
+
+    def staged_microbatch(params, lps, mb, buf, flush=None,
+                          on_loss=None):
+        """One microbatch's staged forward + layer-by-layer backward.
+
+        Gradients accumulate into ``buf`` ((ranks, padded_total) f32
+        stream rows, one per reduction rank) as each stage's cotangent
+        lands; ``flush(stage, buf)`` fires after every landing (the
+        LAST microbatch wires the bucket flush pipeline there);
+        ``on_loss(o, w)`` fires once the forward objective exists —
+        before any flush, so the fused update hook can close over the
+        global weight sum. Returns (buf, o, w), o/w per-rank sums.
+        """
+        emb_p = {"embed": params["embed"]} if token_frontend else {}
+        x = jax.vmap(embed_fn, in_axes=(None, 0))(emb_p, mb["inputs"])
+        # x: (ranks, rows, S, d) for BOTH frontends — stub inputs are
+        # already (rows, S, d), so seq_len must come from the
+        # post-embed activation, not from inputs.shape[-1]
+        positions = jnp.arange(x.shape[-2])
+        xs = [x]
+        auxs = []
+        for l in range(L):
+            x, a = jax.vmap(layer_fn, in_axes=(None, 0, None))(
+                lps[l], x, positions)
+            xs.append(x)
+            auxs.append(a)
+        hp = {k: params[k] for k in head_keys}
+
+        def head_stage(hp_, x_l, lab, wt):
+            (ce, w), vjp = jax.vjp(
+                lambda q, xx: head_fn(q, xx, lab, wt), hp_, x_l)
+            g_hp, x_cot = vjp((jnp.ones((), jnp.float32),
+                               jnp.zeros((), jnp.float32)))
+            return ce, w, g_hp, x_cot
+
+        ce, w, g_hp, x_cot = jax.vmap(
+            head_stage, in_axes=(None, 0, 0, 0))(
+            hp, xs[L], mb["labels"], mb["weights"])
+        aux_tot = jnp.zeros_like(ce)
+        for a in auxs:
+            aux_tot = aux_tot + a
+        o = ce + aux_tot * jax.lax.stop_gradient(w)
+        if on_loss is not None:
+            on_loss(o, w)
+        for key in head_keys:
+            buf = scatter_subtree(buf, key, g_hp[key])
+        if flush is not None:
+            flush(0, buf)
+        w_sg = jax.lax.stop_gradient(w)
+
+        def layer_stage(lp, x_l, xc, ac):
+            _, vjp = jax.vjp(
+                lambda q, xx: layer_fn(q, xx, positions), lp, x_l)
+            return vjp((xc, ac))
+
+        for l in reversed(range(L)):
+            g_lp, x_cot = jax.vmap(
+                layer_stage, in_axes=(None, 0, 0, 0))(
+                lps[l], xs[l], x_cot, w_sg)
+            buf = scatter_subtree(buf, "layers", g_lp, layer=l)
+            if flush is not None:
+                flush(L - l, buf)
+        if token_frontend:
+            def embed_stage(ep, i, xc):
+                _, vjp = jax.vjp(lambda q: embed_fn(q, i), ep)
+                return vjp(xc)[0]
+
+            g_emb = jax.vmap(embed_stage, in_axes=(None, 0, 0))(
+                emb_p, mb["inputs"], x_cot)
+            buf = scatter_subtree(buf, "embed", g_emb["embed"])
+        if flush is not None:
+            flush(L + 1, buf)
+        return buf, o, w
+
+    def split_rank_microbatches(sb):
+        """Per-rank accumulation split, matching the monolithic
+        acc.split_microbatches row assignment (inner-rank-major, so
+        every microbatch takes an equal slice of every inner DP
+        rank's buffer)."""
+        if accum == 1:
+            return [sb]
+
+        def split(a):
+            b = a.shape[1]
+            if b % (inner_dp * accum):
+                raise ValueError(
+                    f"rows {b} per reduction rank not divisible by "
+                    f"accum {accum} x inner ranks {inner_dp}")
+            a2 = a.reshape(ranks, inner_dp, accum,
+                           b // inner_dp // accum, *a.shape[2:])
+            a2 = jnp.swapaxes(a2, 1, 2)
+            return a2.reshape(ranks, accum, b // accum, *a.shape[2:])
+
+        s = {k: split(v) for k, v in sb.items()}
+        return [jax.tree.map(lambda a: a[:, i], s) for i in range(accum)]
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        lr_step = state.opt.step + 1
+        lr = schedules.learning_rate(ocfg, lr_step)
+        params = state.params
+        sb = jax.tree.map(
+            lambda v: jax.lax.with_sharding_constraint(
+                v.reshape(ranks, v.shape[0] // ranks, *v.shape[1:]),
+                rank_spec), batch)
+        mbs = split_rank_microbatches(sb)
+        lps = [jax.tree.map(lambda a: a[l], params["layers"])
+               for l in range(L)]
+        pb = bkt.pack_buckets(params, layout)
+        err_in = state.err if use_err else None   # (pods, nb, be)
+
+        def prep(k, raw_k):
+            """Send-side leg for bucket k: quantize/pack per rank at
+            the top level (no collectives — it overlaps the previous
+            bucket's in-flight exchange)."""
+            x_k = raw_k.reshape(ranks, ranks, shard)
+            if not compress_flag:
+                return x_k, None
+            e_k = (err_in[:, k].reshape(ranks, ranks, shard)
+                   if use_err else None)
+            pv = jax.vmap(
+                lambda xk, ek: bkt.prepare_bucket(
+                    xk, ek, compress=True, block_size=_BLOCK,
+                    key=None, impl=q_impl, interpret=False),
+                in_axes=(0, 0 if use_err else None))
+            return pv(x_k, e_k)
+
+        def exchange(k, prepared):
+            """Link + receive legs for ONE bucket, in its own small
+            manual region — the only collectives in the program, so
+            they interleave with the staged backward in program
+            order."""
+            payload, resid1 = prepared
+            if compress_flag and use_err:
+                def region(pl, rs):
+                    onehot = compat.manual_axis_onehot(
+                        red_axis, ranks, tie=pl)
+                    red, ne = bkt.exchange_prepared_bucket(
+                        pl[0], rs[0], axis=red_axis, axis_size=ranks,
+                        compress=True, block_size=_BLOCK, impl=q_impl,
+                        interpret=False, onehot=onehot)
+                    return red, ne[None]
+
+                return compat.shard_map(
+                    region, mesh=mesh, in_specs=(buf_spec, buf_spec),
+                    out_specs=(P(), buf_spec), axis_names=axis_set,
+                    check_vma=False)(payload, resid1)
+
+            def region(pl):
+                onehot = compat.manual_axis_onehot(
+                    red_axis, ranks, tie=pl)
+                red, _ = bkt.exchange_prepared_bucket(
+                    pl[0], None, axis=red_axis, axis_size=ranks,
+                    compress=compress_flag, block_size=_BLOCK,
+                    impl=q_impl, interpret=False, onehot=onehot)
+                return red
+
+            red = compat.shard_map(
+                region, mesh=mesh, in_specs=buf_spec, out_specs=P(),
+                axis_names=axis_set, check_vma=False)(payload)
+            return red, None
+
+        cell: Dict[str, Any] = {}
+        if fused_stream:
+            def hook(ssq, red_k, k):
+                g_k = red_k * cell["inv_w"]
+                out = adam.apply_update_flat(
+                    pb[k], g_k, state.opt.m[k], state.opt.v[k],
+                    lr_step, ocfg, lr, decay_mask=dmask[k])
+                return ssq + jnp.sum(g_k * g_k), out
+
+            pipeline = bkt.BucketFlushPipeline(
+                readiness, prep, exchange, bucket_fn=hook,
+                fn_carry=jnp.zeros((), jnp.float32))
+        else:
+            pipeline = bkt.BucketFlushPipeline(readiness, prep,
+                                               exchange)
+
+        def flush(stage, buf):
+            pipeline.flush_ready_buckets(
+                stage, lambda k: buf[:, k * be:(k + 1) * be])
+
+        buf = jax.lax.with_sharding_constraint(
+            jnp.zeros((ranks, layout.padded_total), jnp.float32),
+            buf_spec)
+        o_acc = jnp.zeros((ranks,), jnp.float32)
+        w_acc = jnp.zeros((ranks,), jnp.float32)
+        for i, mb in enumerate(mbs):
+            if i == accum - 1:
+                def on_loss(o_mb, w_mb, _oa=o_acc, _wa=w_acc):
+                    o_t, w_t = _oa + o_mb, _wa + w_mb
+                    cell["o"], cell["w"] = o_t, w_t
+                    w_glob = jnp.sum(w_t)
+                    cell["w_glob"] = w_glob
+                    cell["inv_w"] = 1.0 / jnp.maximum(w_glob, 1e-9)
+
+                buf, o_mb, w_mb = staged_microbatch(
+                    params, lps, mb, buf, flush=flush, on_loss=on_loss)
+            else:
+                buf, o_mb, w_mb = staged_microbatch(params, lps, mb,
+                                                    buf)
+                o_acc = o_acc + o_mb
+                w_acc = w_acc + w_mb
+
+        outs, errs, fc = pipeline.finish()
+        o, w = jnp.sum(cell["o"]), cell["w_glob"]
+        if fused_stream:
+            new_pb = jnp.stack([row[0] for row in outs])
+            new_m = jnp.stack([row[1] for row in outs])
+            new_v = jnp.stack([row[2] for row in outs])
+            gnorm = jnp.sqrt(fc)
+            trust = jnp.ones((), jnp.float32)
+        else:
+            red = jnp.stack(outs)
+            new_pb, new_m, new_v, gnorm, trust = _flat_barrier_update(
+                pb, red, state.opt.m, state.opt.v, lr_step, ocfg, lr,
+                inv_w=cell["inv_w"], dmask=dmask, segs=segs,
+                n_leaves=n_leaves)
+        new_params = bkt.unpack_buckets(new_pb, layout)
+        new_err = state.err
+        if use_err and errs is not None:
+            new_err = jnp.stack(errs, axis=1).reshape(ranks, nb, be)
+        loss = weighting.finalize(o, w)
+        metrics = {"loss": loss, "weight": w, "grad_norm": gnorm,
+                   "lr": lr}
+        if ocfg.name == "lamb":
+            metrics["trust_ratio"] = trust
+        new_state = TrainState(
+            params=new_params,
+            opt=adam.AdamState(step=lr_step, m=new_m, v=new_v),
+            err=new_err)
+        return new_state, metrics
+
+    return step
+
+
+# --------------------------------------------------------------------------
 # train step
 # --------------------------------------------------------------------------
 
@@ -427,6 +866,7 @@ def _reduce_bucketed(
 def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
                      ) -> Callable[[TrainState, Dict], Tuple[TrainState,
                                                              Dict]]:
+    validate_train_config(model, tcfg, mesh)
     cfg = model.cfg
     ctx = make_parallel_ctx(mesh)
     ocfg = tcfg.optimizer
@@ -437,14 +877,8 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
     compress = tcfg.het.compression if hier else "none"
     layout = bucket_layout(model, tcfg, mesh) if (hier or bucketed_ar) \
         else None
-    if bucketed_ar and layout is None:
-        if not _reduce_axes(tcfg, mesh):
-            raise ValueError(
-                "grad_reduction='bucketed_allreduce' needs a mesh with "
-                f"data-parallel axes; got {mesh.axis_names}")
-        raise ValueError(
-            "grad_reduction='bucketed_allreduce' needs HetConfig."
-            "bucket_mb > 0")
+    # bucketed_ar always has a layout here: validate_train_config
+    # raised on a missing DP axis, HetConfig.validate on bucket_mb <= 0
     use_err = _err_enabled(tcfg, mesh)
     q_impl = tcfg.het.quantize_impl
     n_dp = dp_size(mesh)
@@ -460,6 +894,25 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
     # exchange but update behind a barrier
     fused_stream = (overlap and ocfg.grad_clip <= 0
                     and ocfg.name != "lamb")
+
+    if overlap and tcfg.het.overlap == "backward":
+        # staged layer-by-layer backward with in-backprop bucket
+        # flushes — built as its own step function (the schedule is a
+        # top-level interleaving of vmapped VJP stages and per-bucket
+        # exchange regions, not a shard_map-wrapped monolith)
+        bwd_step = _build_backward_overlap_step(
+            model, tcfg, mesh, layout=layout, hier=hier,
+            compress=compress, use_err=use_err,
+            fused_stream=fused_stream)
+        specs = state_specs(model, tcfg, mesh)
+        bspecs = shr.batch_specs(cfg, mesh, tcfg.shape.global_batch)
+        return jax.jit(
+            bwd_step,
+            in_shardings=(shr.named(mesh, specs),
+                          shr.named(mesh, bspecs)),
+            out_shardings=(shr.named(mesh, specs), None),
+            donate_argnums=(0,),
+        )
 
     # inside a manual region the manual axes must not appear in sharding
     # constraints — hierarchical keeps "data" automatic inside the pod
@@ -479,7 +932,8 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
     def compute_grads(params, batch):
         """Returns (grad_of_sums, obj_sum, weight_sum) — unscaled."""
         def objective(p, b):
-            o, w, _ = model.loss_fn(p, b, inner_ctx)
+            o, w, _ = model.loss_fn(
+                p, b, inner_ctx, label_smoothing=tcfg.label_smoothing)
             return o, w
 
         grad_fn = jax.value_and_grad(objective, has_aux=True)
@@ -494,6 +948,12 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
         def carry_dtype(p):
             return p.dtype if p.dtype == jnp.bfloat16 else jnp.float32
 
+        if not cfg.scan_layers:
+            # unrolled-program class (scan_layers=False, required by
+            # overlap="backward"): keep the accumulation unrolled too
+            # so the staged backward stays bit-identical at accum > 1
+            return acc.unrolled_accumulate(grad_fn, params, mbs,
+                                           carry_dtype=carry_dtype)
         return acc.scan_accumulate(grad_fn, params, mbs,
                                    carry_dtype=carry_dtype)
 
@@ -570,21 +1030,10 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
             else:
                 red, new_e, _ = bkt.exchange_buckets_overlapped(
                     gb, e, **kwargs)
-                gsc = red * inv_w
-                gnorm = jnp.sqrt(jnp.sum(gsc * gsc))
-                cs = (jnp.minimum(1.0, ocfg.grad_clip /
-                                  jnp.maximum(gnorm, 1e-9))
-                      if ocfg.grad_clip > 0 else None)
-                if ocfg.name == "lamb":
-                    new_pb, new_m, new_v, trust = lamb.apply_update_flat(
-                        pb, gsc, m, v, lr_step, ocfg, lr,
-                        decay_mask=dmask, seg_ids=segs,
-                        num_leaves=n_leaves, clip_scale=cs)
-                else:
-                    new_pb, new_m, new_v = adam.apply_update_flat(
-                        pb, gsc, m, v, lr_step, ocfg, lr,
-                        decay_mask=dmask, clip_scale=cs)
-                    trust = jnp.ones((), jnp.float32)
+                new_pb, new_m, new_v, gnorm, trust = \
+                    _flat_barrier_update(
+                        pb, red, m, v, lr_step, ocfg, lr, inv_w=inv_w,
+                        dmask=dmask, segs=segs, n_leaves=n_leaves)
             return (bkt.unpack_buckets(new_pb, layout), new_m, new_v,
                     new_e, gnorm, trust)
 

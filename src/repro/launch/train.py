@@ -59,6 +59,10 @@ from repro.models.model import build_model
 def build_everything(args):
     cfg = (cfgbase.smoke_config(args.arch) if args.smoke
            else cfgbase.resolve(args.arch))
+    if getattr(args, "no_scan_layers", False):
+        # unrolled layer stack — required by --overlap backward (the
+        # staged layer-by-layer backward is an unrolled program)
+        cfg = dataclasses.replace(cfg, scan_layers=False)
     model = build_model(cfg)
 
     dshape = tuple(int(x) for x in args.devices.split(","))
@@ -137,6 +141,22 @@ def train(args) -> Dict[str, float]:
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}, plan rows "
           f"{plan.rows_per_rank.tolist()} buffer {plan.buffer_rows} "
           f"(efficiency {plan.efficiency():.2f})")
+    if args.dry_run:
+        # validate the full config stack (the same checks
+        # build_train_step runs) and stop before any compilation or
+        # data generation — the README quickstart smoke in
+        # benchmarks/run.py --quick executes every documented command
+        # this way, so a renamed flag or an invalid documented config
+        # fails the quick tier loudly
+        steps_mod.validate_train_config(model, tcfg, mesh)
+        print(f"[train] dry-run ok: grad_reduction="
+              f"{tcfg.het.grad_reduction} overlap={tcfg.het.overlap} "
+              f"bucket_mb={tcfg.het.bucket_mb} "
+              f"compression={tcfg.het.compression} "
+              f"accum={tcfg.het.accum_steps} "
+              f"optimizer={tcfg.optimizer.name} "
+              f"scan_layers={cfg.scan_layers}")
+        return {"steps": 0, "wall_s": 0.0}
 
     corpus = build_synthetic_corpus(
         args.data_dir, num_seqs=max(4 * plan.global_rows, 256),
@@ -164,7 +184,8 @@ def train(args) -> Dict[str, float]:
         """Repacked restore: the template carries THIS config's layout;
         the manager translates whatever the checkpoint holds into it."""
         template = steps_mod.state_shapes(model, tcfg, mesh)
-        host, meta = mgr.restore(template)
+        host, meta = mgr.restore(template,
+                                 expected_overlap=tcfg.het.overlap)
         saved_plan = meta.get("plan")
         if saved_plan is not None and not \
                 elastic.validate_resume_equivalence(saved_plan, plan):
@@ -358,19 +379,27 @@ def main():
     ap.add_argument("--capacities", default="",
                     help="per-DP-rank relative capacities, e.g. 2,1,1,0")
     ap.add_argument("--grad-reduction", default="allreduce",
-                    choices=["allreduce", "bucketed_allreduce",
-                             "hierarchical"])
+                    choices=list(cfgbase.GRAD_REDUCTION_MODES))
     ap.add_argument("--compression", default="none",
-                    choices=["none", "int8"])
+                    choices=list(cfgbase.COMPRESSION_MODES))
     ap.add_argument("--bucket-mb", type=float, default=0.0,
                     help="bucketed flat-buffer reduction: bucket payload"
                          " in MiB of f32 (0 = legacy per-leaf walk)")
     ap.add_argument("--overlap", default="none",
-                    choices=["none", "buckets"],
+                    choices=list(cfgbase.OVERLAP_MODES),
                     help="'buckets': double-buffered per-bucket exchange"
-                         " fused with per-bucket optimizer updates"
-                         " (needs an explicit --grad-reduction and"
-                         " --bucket-mb > 0)")
+                         " fused with per-bucket optimizer updates,"
+                         " after the backward pass; 'backward': flush"
+                         " buckets DURING backprop as each layer's"
+                         " grads land (also needs --no-scan-layers)."
+                         " Both need an explicit --grad-reduction and"
+                         " --bucket-mb > 0")
+    ap.add_argument("--no-scan-layers", action="store_true",
+                    help="unroll the layer stack instead of lax.scan "
+                         "(required by --overlap backward; larger HLO)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="build mesh/plan, validate the config, print "
+                         "the summary, and exit without training")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "lamb"],

@@ -55,13 +55,22 @@ def build_model(cfg: ModelConfig) -> Model:
 
     def loss_fn(params, batch: Dict[str, jnp.ndarray],
                 ctx: ParallelCtx = LOCAL_CTX,
-                ce_impl: str = "reference"):
+                ce_impl: str = "reference",
+                label_smoothing: Optional[float] = None):
         """batch: inputs (B,S)[int] or (B,S,d)[stub], labels (B,S) int32,
         weights (B,S) f32 (0 => dummy token, paper M3).
+
+        ``label_smoothing``: static CE smoothing factor (the train step
+        passes ``TrainConfig.label_smoothing``); None falls back to a
+        float ``batch["label_smoothing"]`` entry if present, else 0.0.
 
         Returns (objective_sum, weight_sum, metrics). objective_sum is
         differentiable; divide by (globally summed) weight_sum once.
         """
+        if label_smoothing is None:
+            from_batch = batch.get("label_smoothing", 0.0)
+            label_smoothing = (from_batch
+                               if isinstance(from_batch, float) else 0.0)
         x = tr.embed_tokens(params, batch["inputs"], cfg, ctx)
         hidden, aux = tr.hidden_states(params, x, cfg, ctx)
         b, s, d = hidden.shape
@@ -70,8 +79,7 @@ def build_model(cfg: ModelConfig) -> Model:
             hidden.reshape(b * s, d), lm_w,
             batch["labels"].reshape(-1).astype(jnp.int32),
             batch["weights"].reshape(-1).astype(jnp.float32),
-            label_smoothing=batch.get("label_smoothing", 0.0)
-            if isinstance(batch.get("label_smoothing", 0.0), float) else 0.0,
+            label_smoothing=label_smoothing,
             logit_softcap=cfg.logit_softcap,
             impl=ce_impl)
         # fold the MoE aux loss in as a per-token penalty so that

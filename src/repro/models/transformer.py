@@ -299,8 +299,20 @@ def hidden_states(params, embeds: jnp.ndarray, cfg: ModelConfig,
             x2, a = apply_uniform_layer(lp, x, cfg, ctx, positions)
             return (sp(x2), aux + a), None
         body = _remat(body, cfg)
-        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
-                                         params["layers"])
+        if cfg.scan_layers:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["layers"])
+        else:
+            # unrolled stack (cfg.scan_layers=False): same per-layer
+            # body, python loop instead of lax.scan. Required by
+            # HetConfig.overlap="backward" — the staged layer-by-layer
+            # backward is an unrolled program, and XLA compiles dots
+            # inside a scan body differently from top-level dots
+            # (last-bit fp differences), so bit-exact overlap needs the
+            # monolithic path unrolled too. Costs an L-times-larger HLO.
+            for layer in range(cfg.num_layers):
+                lp = jax.tree.map(lambda a: a[layer], params["layers"])
+                (x, aux_total), _ = body((x, aux_total), lp)
 
     elif plan == "mamba":
         def body(carry, lp):
@@ -342,6 +354,87 @@ def hidden_states(params, embeds: jnp.ndarray, cfg: ModelConfig,
                             (params["mlstm_layers"], params["slstm_layers"]))
 
     return apply_norm(params["final_norm"], x, cfg), aux_total
+
+
+# --------------------------------------------------------------------------
+# staged backward segments (HetConfig.overlap="backward")
+#
+# The backward-overlap pipeline needs gradients layer by layer, so the
+# loss is decomposed into VJP-able segments over the uniform block
+# stack (a jax.remat-style staged backward: the forward saves only the
+# residual-stream carry at every layer boundary, and each segment's
+# VJP recomputes its own activations — exactly what jax.checkpoint
+# does inside the monolithic scan). Segment math is IDENTICAL to the
+# hidden_states/loss_fn path: layer_fn is the scan body, head_fn is
+# final-norm + LM head + weighted CE, embed_fn the token embedding, so
+# with cfg.scan_layers=False the staged gradients are bit-identical to
+# jax.grad of the monolithic objective (asserted by
+# tests/test_overlap.py).
+#
+# Stage numbering (backward completion order): stage 0 = head
+# (final_norm, lm_head / tied embed — lands first), stage s in [1, L]
+# = layer L-s, stage L+1 = the embedding table (lands last; a tied
+# table also receives a head-stage contribution, so its grad is only
+# final at L+1). core/buckets.py::bucket_readiness maps these stages
+# onto the flat bucket grid.
+# --------------------------------------------------------------------------
+
+
+def supports_staged_backward(cfg: ModelConfig) -> bool:
+    """The staged backward covers the uniform stack plan (dense / moe /
+    mla); the mamba/zamba/xlstm plans keep the scanned backward."""
+    return stack_plan(cfg) == "uniform"
+
+
+def head_param_keys(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Top-level param keys whose grads land at stage 0 (the head)."""
+    if cfg.tie_embeddings and cfg.frontend == "token":
+        return ("final_norm", "embed")
+    return ("final_norm", "lm_head")
+
+
+def staged_uniform_segments(cfg: ModelConfig, ctx: ParallelCtx, *,
+                            label_smoothing: float = 0.0,
+                            ce_impl: str = "reference") -> Dict[str, Any]:
+    """The VJP-able segment functions of the uniform-stack objective.
+
+    Returns a dict of pure functions (each vmap/vjp-able per DP rank):
+
+      embed_fn(embed_params, inputs)        -> x0 (stage L+1 forward)
+      layer_fn(lp, x, positions)            -> (x', aux_l) — the
+                                               hidden_states scan body
+      head_fn(head_params, x, labels, weights) -> (ce_sum, w_sum)
+
+    The caller composes ``objective = ce_sum + (sum aux_l) *
+    stop_grad(w_sum)`` (model.py's aggregation contract) and drives the
+    backward newest-stage-first, handing each landed gradient to the
+    bucket flush pipeline.
+    """
+    def sp(x):
+        return constrain(x, ctx, batch_spec(ctx, ctx.tp_axis, None))
+
+    def embed_fn(embed_params, inputs):
+        return sp(embed_tokens(embed_params, inputs, cfg, ctx))
+
+    def layer_fn(lp, x, positions):
+        x2, a = apply_uniform_layer(lp, x, cfg, ctx, positions)
+        return sp(x2), a
+
+    def head_fn(head_params, x, labels, weights):
+        hidden = apply_norm(head_params["final_norm"], x, cfg)
+        b, s, d = hidden.shape
+        lm_w = lm_head_matrix(head_params, cfg)
+        from repro.kernels.cross_entropy import ops as ce_ops
+        return ce_ops.weighted_cross_entropy(
+            hidden.reshape(b * s, d), lm_w,
+            labels.reshape(-1).astype(jnp.int32),
+            weights.reshape(-1).astype(jnp.float32),
+            label_smoothing=label_smoothing,
+            logit_softcap=cfg.logit_softcap,
+            impl=ce_impl)
+
+    return {"embed_fn": embed_fn, "layer_fn": layer_fn,
+            "head_fn": head_fn, "head_keys": head_param_keys(cfg)}
 
 
 # --------------------------------------------------------------------------

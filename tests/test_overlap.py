@@ -142,7 +142,9 @@ def test_lamb_flat_trust_ratios_match_tree_lamb():
 
 
 def test_overlap_config_validation():
-    """overlap='buckets' must refuse configs it cannot pipeline."""
+    """overlap='buckets'/'backward' must refuse configs they cannot
+    pipeline — one clear ValueError at build time, not a failure deep
+    in the pipeline."""
     import dataclasses
     from repro.configs import base as cfgs
     from repro.configs.base import HetConfig, TrainConfig
@@ -151,10 +153,11 @@ def test_overlap_config_validation():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     model = cfgs.smoke_config("olmo-1b")
     for het, err in ((HetConfig(overlap="buckets"), "explicit"),
+                     (HetConfig(overlap="backward"), "explicit"),
                      (HetConfig(overlap="buckets",
                                 grad_reduction="bucketed_allreduce"),
                       "bucket_mb"),
-                     (HetConfig(overlap="banana"), "unknown")):
+                     (HetConfig(overlap="banana"), "not one of")):
         tcfg = TrainConfig(model=model, het=het)
         with pytest.raises(ValueError, match=err):
             _overlap_enabled(tcfg, mesh)
@@ -164,6 +167,106 @@ def test_overlap_config_validation():
     assert _overlap_enabled(ok, mesh)
     none = dataclasses.replace(ok, het=HetConfig())
     assert not _overlap_enabled(none, mesh)
+
+
+def test_backward_overlap_build_validation():
+    """overlap='backward' model/mesh rules: scanned stacks and
+    non-uniform plans are refused with actionable messages."""
+    import dataclasses
+    from repro.configs import base as cfgs
+    from repro.configs.base import HetConfig, TrainConfig
+    from repro.launch.steps import validate_train_config
+    from repro.models.model import build_model
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    het = HetConfig(overlap="backward",
+                    grad_reduction="bucketed_allreduce", bucket_mb=0.05)
+
+    scanned = build_model(cfgs.smoke_config("olmo-1b"))
+    with pytest.raises(ValueError, match="scan_layers"):
+        validate_train_config(
+            scanned, TrainConfig(model=scanned.cfg, het=het), mesh)
+
+    xl_cfg = dataclasses.replace(cfgs.smoke_config("xlstm-125m"),
+                                 scan_layers=False)
+    xl = build_model(xl_cfg)
+    with pytest.raises(ValueError, match="uniform"):
+        validate_train_config(xl, TrainConfig(model=xl_cfg, het=het),
+                              mesh)
+
+    un_cfg = dataclasses.replace(cfgs.smoke_config("olmo-1b"),
+                                 scan_layers=False)
+    un = build_model(un_cfg)
+    validate_train_config(un, TrainConfig(model=un_cfg, het=het), mesh)
+
+
+def test_bucket_readiness_maps_layer_partition_to_buckets():
+    """The readiness schedule: a bucket is flushable at the LATEST
+    backward stage of any element it contains; padding never delays."""
+    tree = {"emb": jnp.zeros((40,)), "layers": jnp.zeros((4, 30)),
+            "z_head": jnp.zeros((25,))}
+    layout = bkt.build_layout(tree, bucket_mb=40 * 4 / (1 << 20),
+                              multiple_of=5)
+    # flatten order: emb(40), layers(120), z_head(25); stream total 185
+    L = 4
+    pieces = [
+        [(0, 40, L + 1)],                               # emb: last
+        [(l * 30, 30, L - l) for l in range(L)],        # back-to-front
+        [(0, 25, 0)],                                   # head: first
+    ]
+    ready = bkt.bucket_readiness(layout, pieces)
+    assert len(ready) == layout.num_buckets
+    be = layout.bucket_elems
+    for k, r in enumerate(ready):
+        stages = set()
+        for (off, size), leaf_pieces in zip(
+                zip(layout.offsets, layout.sizes), pieces):
+            for p_off, n, stage in leaf_pieces:
+                lo, hi = off + p_off, off + p_off + n
+                if lo < (k + 1) * be and hi > k * be:
+                    stages.add(stage)
+        assert r == max(stages), (k, r, stages)
+    # the bucket holding the embedding always waits for the last stage
+    assert ready[0] == L + 1
+    # mismatched pieces fail loudly
+    with pytest.raises(ValueError, match="tile"):
+        bkt.bucket_readiness(layout, [[(1, 39, 0)], pieces[1],
+                                      pieces[2]])
+
+
+def test_flush_pipeline_double_buffer_and_ordering():
+    """BucketFlushPipeline: prep(next) issues before exchange(current),
+    results assemble in bucket-index order, finish() refuses missing
+    flushes."""
+    readiness = (2, 0, 1, 0)            # flush order: 1, 3, 2, 0
+    log = []
+
+    def prep(k, raw_k):
+        log.append(("prep", k))
+        return raw_k
+
+    def exchange(k, prepared):
+        log.append(("exchange", k))
+        return prepared * 10.0, None
+
+    pipe = bkt.BucketFlushPipeline(readiness, prep, exchange)
+    raw = jnp.arange(4.0)
+    for stage in range(3):
+        pipe.flush_ready_buckets(stage, lambda k: raw[k])
+    outs, errs, _ = pipe.finish()
+    assert errs is None
+    np.testing.assert_array_equal(np.asarray(jnp.stack(outs)),
+                                  [0.0, 10.0, 20.0, 30.0])
+    # double buffer: each bucket's prep precedes the PREVIOUS bucket's
+    # exchange; exchanges run in flush (readiness) order
+    assert log == [("prep", 1), ("prep", 3), ("exchange", 1),
+                   ("prep", 2), ("exchange", 3), ("prep", 0),
+                   ("exchange", 2), ("exchange", 0)]
+
+    pipe2 = bkt.BucketFlushPipeline(readiness, prep, exchange)
+    pipe2.flush_ready_buckets(0, lambda k: raw[k])
+    with pytest.raises(ValueError, match="finish"):
+        pipe2.finish()
 
 
 @pytest.mark.slow
@@ -382,4 +485,169 @@ def test_fused_overlap_train_step_matches_monolithic():
         assert np.any(np.asarray(s1.err) != 0.0)   # feedback is live
         print("OK")
         """, timeout=900)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_backward_overlap_train_step_matches_monolithic():
+    """overlap='backward' (buckets flushed DURING backprop): full train
+    steps vs the monolithic path and the after-backward pipeline, with
+    scan_layers=False (the unrolled program class the staged backward
+    requires). fp32 grad_clip=0 is bit-identical — losses AND params —
+    for both reduction modes; the clip barrier and LAMB paths are
+    bit-identical to overlap='buckets' (same barrier update over the
+    same reduced stack); int8 + error feedback tracks bitwise
+    (per-bucket exchanges are order-independent)."""
+    out = run_child("""
+        import dataclasses
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.configs import base
+        from repro.configs.base import TrainConfig, HetConfig, \\
+            OptimizerConfig, ShapeConfig
+        from repro.models.model import build_model
+        from repro.launch import steps
+        from repro import compat
+        from repro.core import capacity, dummy
+        from repro.data import synthetic
+
+        cfg = dataclasses.replace(base.smoke_config("olmo-1b"),
+                                  compute_dtype="float32",
+                                  scan_layers=False)
+        m = build_model(cfg)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        shape = ShapeConfig("t", 16, 8, "train")
+        rec = synthetic.make_lm_records(8, 17, cfg.vocab_size, seed=5)
+        plan = capacity.plan_capacities(8, [1, 1, 1, 1])
+        packed = dummy.pack_global_batch(
+            {"inputs": rec["inputs"][:, :16],
+             "labels": rec["labels"][:, :16]}, plan)
+
+        def run(mode, compress, overlap, clip, opt="adamw", accum=1):
+            tcfg = TrainConfig(model=cfg, shape=shape,
+                               het=HetConfig(grad_reduction=mode,
+                                             compression=compress,
+                                             bucket_mb=0.05,
+                                             overlap=overlap,
+                                             accum_steps=accum),
+                               optimizer=OptimizerConfig(
+                                   name=opt, lr=1e-3, warmup_steps=2,
+                                   grad_clip=clip))
+            with compat.set_mesh(mesh):
+                state = steps.init_train_state(m, tcfg, mesh,
+                                               jax.random.PRNGKey(0))
+                step = steps.build_train_step(m, tcfg, mesh)
+                batch = {k: jnp.asarray(v) for k, v in packed.items()}
+                losses = []
+                for _ in range(3):
+                    state, met = step(state, batch)
+                    losses.append(float(met["loss"]))
+            return losses, jax.device_get(state)
+
+        def assert_bitwise(s0, s1):
+            for a, b in zip(jax.tree.leaves(s0.params),
+                            jax.tree.leaves(s1.params)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+        # fp32, clip=0, fused stream: bit-identical to the monolithic
+        # path AND the after-backward pipeline (ACCEPTANCE criterion)
+        l0, s0 = run("bucketed_allreduce", "none", "none", 0.0)
+        l1, s1 = run("bucketed_allreduce", "none", "backward", 0.0)
+        l2, s2 = run("bucketed_allreduce", "none", "buckets", 0.0)
+        assert l0 == l1 == l2, (l0, l1, l2)
+        assert_bitwise(s0, s1)
+        assert_bitwise(s1, s2)
+
+        # clip barrier: exchanges still flush during backprop, update
+        # behind the barrier — bit-identical to the 'buckets' barrier
+        l1, s1 = run("bucketed_allreduce", "none", "backward", 1.0)
+        l2, s2 = run("bucketed_allreduce", "none", "buckets", 1.0)
+        assert l1 == l2, (l1, l2)
+        assert_bitwise(s1, s2)
+
+        # LAMB barrier
+        l1, s1 = run("bucketed_allreduce", "none", "backward", 0.0,
+                     opt="lamb")
+        l2, s2 = run("bucketed_allreduce", "none", "buckets", 0.0,
+                     opt="lamb")
+        assert l1 == l2, (l1, l2)
+        assert_bitwise(s1, s2)
+
+        # hierarchical + int8 + error feedback, fused stream: the
+        # per-bucket exchange is order-independent, so the flush
+        # schedule must track the after-backward pipeline bitwise —
+        # err state included
+        l1, s1 = run("hierarchical", "int8", "backward", 0.0)
+        l2, s2 = run("hierarchical", "int8", "buckets", 0.0)
+        assert l1 == l2, (l1, l2)
+        assert_bitwise(s1, s2)
+        np.testing.assert_array_equal(np.asarray(s1.err),
+                                      np.asarray(s2.err))
+        assert np.any(np.asarray(s1.err) != 0.0)
+
+        # gradient accumulation: every microbatch's backward is staged,
+        # flushes fire only during the last one. Losses stay bitwise;
+        # params are tolerance-equal (the monolithic whole-grad and the
+        # staged per-layer VJPs compile into different fp contexts at
+        # accum > 1)
+        l0, s0 = run("bucketed_allreduce", "none", "none", 0.0,
+                     accum=2)
+        l1, s1 = run("bucketed_allreduce", "none", "backward", 0.0,
+                     accum=2)
+        assert l0 == l1, (l0, l1)
+        for a, b in zip(jax.tree.leaves(s0.params),
+                        jax.tree.leaves(s1.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=1e-5)
+
+        # embedding_stub frontend (no token table; inputs are (B,S,d)
+        # embeddings — regression: positions must come from the
+        # POST-embed activation, not inputs.shape[-1]): losses bitwise,
+        # params to fp-rounding tolerance (this arch's program class
+        # drifts ~1e-7 between whole-grad and staged compilation)
+        scfg = dataclasses.replace(base.smoke_config("musicgen-large"),
+                                   compute_dtype="float32",
+                                   scan_layers=False)
+        assert scfg.frontend == "embedding_stub"
+        sm = build_model(scfg)
+        sbatch = {
+            "inputs": jnp.asarray(np.random.default_rng(1)
+                                  .standard_normal((8, 16, scfg.d_model)),
+                                  jnp.bfloat16),
+            "labels": jnp.asarray(np.random.default_rng(2)
+                                  .integers(0, scfg.vocab_size, (8, 16)),
+                                  jnp.int32),
+            "weights": jnp.ones((8, 16), jnp.float32),
+        }
+
+        def run_stub(overlap):
+            tcfg = TrainConfig(model=scfg, shape=shape,
+                               het=HetConfig(
+                                   grad_reduction="bucketed_allreduce",
+                                   bucket_mb=0.05, overlap=overlap),
+                               optimizer=OptimizerConfig(
+                                   lr=1e-3, warmup_steps=2,
+                                   grad_clip=0.0))
+            with compat.set_mesh(mesh):
+                state = steps.init_train_state(sm, tcfg, mesh,
+                                               jax.random.PRNGKey(0))
+                step = steps.build_train_step(sm, tcfg, mesh)
+                losses = []
+                for _ in range(2):
+                    state, met = step(state, sbatch)
+                    losses.append(float(met["loss"]))
+            return losses, jax.device_get(state)
+
+        l0, s0 = run_stub("none")
+        l1, s1 = run_stub("backward")
+        assert l0 == l1, (l0, l1)
+        for a, b in zip(jax.tree.leaves(s0.params),
+                        jax.tree.leaves(s1.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=1e-5)
+        print("OK")
+        """, timeout=1800)
     assert "OK" in out
