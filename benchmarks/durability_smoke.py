@@ -1,0 +1,88 @@
+"""Checkpoint durability smoke — save -> corrupt -> fallback restore.
+
+Dry-run sized (a few-KB synthetic state, no model, no mesh): writes two
+committed v3 per-host-sharded checkpoints, then for each fault class —
+truncated shard file, flipped payload byte, deleted manifest.json —
+verifies that restore rejects the newest step via the manifest
+validation (sizes + sha256 content checksums) and falls back to the
+previous ``_DONE``-committed step, and that an explicitly requested
+corrupt step raises. Runs in ``benchmarks/run.py --quick`` so the CI
+smoke tier exercises the manifest path on every change.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+FAULTS = ("truncate_shard", "flip_byte", "delete_manifest")
+
+
+def _corrupt(step_dir: str, fault: str) -> None:
+    shard = os.path.join(step_dir, "arrays_host1.npz")
+    if fault == "truncate_shard":
+        size = os.path.getsize(shard)
+        with open(shard, "rb+") as fh:
+            fh.truncate(size // 2)
+    elif fault == "flip_byte":
+        with open(shard, "rb+") as fh:
+            data = bytearray(fh.read())
+            data[len(data) // 2] ^= 0xFF
+            fh.seek(0)
+            fh.write(bytes(data))
+    elif fault == "delete_manifest":
+        os.remove(os.path.join(step_dir, "manifest.json"))
+    else:
+        raise ValueError(fault)
+
+
+def run_durability_smoke() -> int:
+    """Exercise every fault class; returns the scenario count. Raises
+    ``SystemExit`` on the first broken invariant."""
+    import numpy as np
+
+    from repro.checkpoint import repack
+    from repro.checkpoint.checkpoint import (CheckpointCorruptError,
+                                             CheckpointManager)
+
+    def state(seed):
+        r = np.random.default_rng(seed)
+        return {"w": r.standard_normal((64, 8)).astype(np.float32),
+                "b": r.standard_normal(512).astype(np.float32)}
+
+    fmt = {"version": repack.FORMAT_VERSION, "hosts": 2,
+           "packed_fields": [], "layout": None, "overlap": "none"}
+    for fault in FAULTS:
+        d = tempfile.mkdtemp(prefix="hetseq_durability_")
+        try:
+            mgr = CheckpointManager(d, keep=5)
+            s1, s2 = state(1), state(2)
+            mgr.save(1, s1, meta={"format": dict(fmt)}, block=True)
+            mgr.save(2, s2, meta={"format": dict(fmt)}, block=True)
+            _corrupt(os.path.join(d, "step_0000000002"), fault)
+            try:
+                mgr.restore(state(0), step=2)
+            except CheckpointCorruptError:
+                pass
+            else:
+                raise SystemExit(
+                    f"durability smoke: explicit restore of the "
+                    f"corrupted step ({fault}) did not raise")
+            got, meta = mgr.restore(state(0))
+            if meta["step"] != 1:
+                raise SystemExit(
+                    f"durability smoke: fallback after {fault} landed "
+                    f"on step {meta['step']}, expected 1")
+            if not (np.array_equal(got["w"], s1["w"])
+                    and np.array_equal(got["b"], s1["b"])):
+                raise SystemExit(
+                    f"durability smoke: fallback restore after {fault} "
+                    f"is not bit-identical to the committed step 1")
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    return len(FAULTS)
+
+
+if __name__ == "__main__":
+    n = run_durability_smoke()
+    print(f"[durability_smoke] {n} fault scenario(s) ok")

@@ -23,6 +23,10 @@ DOC = """Benchmark suite — one entry per paper table/figure + roofline.
                        not strictly below the serial modeled time, or
                        the fused pipeline diverges from the monolithic
                        update)
+  durability_smoke     (--quick only) checkpoint manifest path: save ->
+                       corrupt a shard / delete the manifest ->
+                       checksum-validated fallback restore to the
+                       previous committed step
 
 --quick: the CI smoke tier — runs the fail-loud reduce/overlap bench
 smokes plus the repo's quick test tier (``pytest -m "not slow"``: the
@@ -85,7 +89,10 @@ def main() -> None:
                 f"exact_fp32={ob['fp32']['exact_match']}"))
 
     if args.quick:
-        from benchmarks import docs_smoke
+        from benchmarks import docs_smoke, durability_smoke
+        n_faults = durability_smoke.run_durability_smoke()
+        csv.append(("durability_smoke", 0.0,
+                    f"fault_scenarios={n_faults}"))
         n_cmds = docs_smoke.run_docs_smoke()
         csv.append(("docs_smoke", 0.0, f"readme_commands={n_cmds}"))
         tier_s = _run_quick_test_tier()

@@ -1,4 +1,4 @@
-"""M7 — full-state checkpointing (async, atomic, rotated, repackable).
+"""M7 — full-state checkpointing (async, atomic, sharded, durable).
 
 The paper's checkpoint carries: model parameters, completed epochs,
 completed steps, optimizer + LR-scheduler state, and the RNG seed. Ours
@@ -8,58 +8,90 @@ round-trips into a real ``CapacityPlan``) and the data-stream position
 *different* mesh resumes the identical global sample stream
 (core/elastic.py invariant).
 
-On-disk layout (version 2): ``<dir>/step_<N>/``
+On-disk layout (version 3): ``<dir>/step_<N>/``
 
-  arrays.npz   every pytree leaf, keyed by its escaped ``/``-joined
-               path (repack.path_key: components percent-escape ``%``
-               and ``/``, attribute/index keys map to bare name/index;
-               collisions raise at save time)
+  arrays_host<k>.npz
+               host ``k``'s shards of the state, keyed by the escaped
+               ``/``-joined leaf path (repack.path_key). Packed 2-D
+               stacks (``opt/m`` / ``opt/v`` as (num_buckets,
+               bucket_elems)) are split by bucket rows across hosts
+               along the extents in the layout record
+               (core/buckets.py::host_shard_extents); the (ranks, ...)
+               ``err`` stack is split by rank; every other leaf is
+               written whole by exactly one host, balanced by bytes.
+               The host count comes from ``meta["format"]["hosts"]``
+               (launch/steps.py::checkpoint_format records the pod
+               count) — on a real fleet each host writes only its own
+               file instead of gathering onto one writer.
+  manifest.json
+               crash-consistency record: per-file byte sizes and
+               sha256 content checksums, plus the key -> shard-extent
+               map each file holds. Restore refuses the step on any
+               mismatch and falls back to the previous committed one.
   meta.json    step / epoch / seed / structured plan / data-stream
-               position, plus a ``"format"`` block: format version,
-               which TrainState fields were saved packed
-               (``overlap="buckets"`` stores AdamW/LAMB moments as one
-               (num_buckets, bucket_elems) stack), and the versioned
-               ``BucketLayout`` record + fingerprint describing that
-               grid (core/buckets.py::layout_record)
+               position, plus the ``"format"`` block (format version,
+               packed fields, versioned ``BucketLayout`` record +
+               fingerprint, writing overlap mode, host count).
   _DONE        commit marker, written into the temp dir before the
                atomic rename — a crash at ANY point leaves either a
                committed ``step_<N>`` or an ignorable ``.tmp``
 
-Repack-on-restore: ``restore`` hands the loaded arrays through
-``repack.adapt_arrays`` before unflattening, so a checkpoint written
-under any layout (packed moments of any bucket grid, pytree moments,
-flat or per-leaf error state, any reduction rank count) restores into
-whatever layout the caller's template expects — packed<->pytree and
-grid-to-grid translations go through the layout-invariant flat stream
-and are bit-exact (see checkpoint/repack.py for the one documented
-exception: per-rank error-feedback residuals across a rank-count
-change, where only their sum is conserved).
+Durability: every file is fsynced after write, the temp directory is
+fsynced before the atomic rename, and the parent directory after it —
+a committed ``step_<N>`` is on the platter, not in the page cache.
+Version-2 checkpoints (one gathered ``arrays.npz``, no manifest) still
+load; pass ``format_version=2`` to ``save`` to write one.
+
+Repack-on-restore: ``restore`` reassembles the per-host shards into the
+flat ``{path key: array}`` stream (validating manifest coverage) and
+hands it through ``repack.adapt_arrays`` before unflattening, so a
+checkpoint written under any layout (packed moments of any bucket grid,
+pytree moments, flat or per-leaf error state, any reduction rank count)
+restores into whatever layout the caller's template expects —
+packed<->pytree and grid-to-grid translations go through the
+layout-invariant flat stream and are bit-exact. Across a rank-count
+change the summed error-feedback residual is distributed over the new
+ranks' stream extents (sum conserved bit-exactly, no rank parked with
+the whole residual — see checkpoint/repack.py).
 
 Async: ``save`` snapshots device arrays to host (blocking, cheap), then
 writes files on a background thread — the train loop never waits on
-disk. On real multi-host deployments only process 0 writes (the paper's
-master-process rule); sharded arrays are fully gathered here since CPU
-dry-run params are process-local (noted in DESIGN.md §deviations).
+disk. Callers MUST ``wait()`` on every exit path (launch/train.py does)
+or the final checkpoint of a run can be lost with the daemon thread.
 """
 from __future__ import annotations
 
+import glob
+import hashlib
+import io
 import json
 import logging
 import os
 import shutil
 import threading
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.checkpoint import repack
+from repro.core.buckets import host_shard_extents
 from repro.core.capacity import CapacityPlan, plan_from_record, plan_record
 
 _DONE = "_DONE"
 _PLAN_TAG = "__capacity_plan__"
+_MANIFEST = "manifest.json"
+_META = "meta.json"
 
 logger = logging.getLogger(__name__)
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed step failed manifest/content validation (truncated or
+    bit-flipped shard, missing manifest, unreadable file). ``restore``
+    falls back to the previous committed step unless the caller asked
+    for this step explicitly."""
 
 
 def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
@@ -67,9 +99,33 @@ def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
             for k, v in repack.flatten_with_paths(tree).items()}
 
 
-def _unflatten_like(template: Any, arrays: Dict[str, np.ndarray]) -> Any:
+def _cast_is_lossy(src: np.dtype, dst: np.dtype) -> bool:
+    """Whether restoring a ``src`` leaf into a ``dst`` template leaf
+    loses information (fp32 ckpt -> bf16 template, float -> int, int64
+    -> int32). Extension float dtypes (bfloat16) fail ``np.can_cast``,
+    so float pairs compare precision envelopes via ``finfo``; anything
+    undecidable counts as lossy."""
+    import jax.numpy as jnp
+
+    if src == dst:
+        return False
+    try:
+        fs, fd = jnp.finfo(src), jnp.finfo(dst)
+        return not (fd.nmant >= fs.nmant and fd.maxexp >= fs.maxexp
+                    and fd.minexp <= fs.minexp)
+    except (TypeError, ValueError):
+        pass
+    try:
+        return not np.can_cast(src, dst, casting="safe")
+    except TypeError:
+        return True
+
+
+def _unflatten_like(template: Any, arrays: Dict[str, np.ndarray],
+                    allow_cast: bool = False) -> Any:
     paths_leaves = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
+    cast = []
     for path, leaf in paths_leaves[0]:
         key = repack.path_key(path)
         if key not in arrays:
@@ -79,7 +135,20 @@ def _unflatten_like(template: Any, arrays: Dict[str, np.ndarray]) -> Any:
             raise ValueError(
                 f"shape mismatch for '{key}': ckpt {arr.shape} vs "
                 f"model {leaf.shape}")
+        src, dst = np.dtype(arr.dtype), np.dtype(leaf.dtype)
+        if src != dst:
+            if _cast_is_lossy(src, dst) and not allow_cast:
+                raise ValueError(
+                    f"lossy dtype cast for '{key}': checkpoint {src} "
+                    f"-> template {dst} would lose precision; pass "
+                    f"allow_cast=True to restore() to accept it")
+            cast.append((key, src, dst))
         leaves.append(arr.astype(leaf.dtype))
+    if cast:
+        logger.warning(
+            "checkpoint restore cast %d leaf/leaves to the template "
+            "dtype (first: '%s' %s -> %s)", len(cast), cast[0][0],
+            cast[0][1], cast[0][2])
     return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
 
 
@@ -116,6 +185,133 @@ def _meta_hook(d: Dict) -> Any:
     return d
 
 
+# ---- durability primitives ------------------------------------------------
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as fh:
+        for chunk in iter(lambda: fh.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _write_json_synced(path: str, obj: Any, **dump_kw: Any) -> None:
+    with open(path, "w") as fh:
+        json.dump(obj, fh, indent=1, **dump_kw)
+        fh.flush()
+        os.fsync(fh.fileno())
+
+
+def _write_bytes_synced(path: str, data: bytes) -> Dict[str, Any]:
+    """Write + fsync one manifest-tracked file; the size/checksum come
+    from the in-memory bytes, so the save path never re-reads what it
+    just wrote (``_sha256`` re-reads only on the restore side)."""
+    with open(path, "wb") as fh:
+        fh.write(data)
+        fh.flush()
+        os.fsync(fh.fileno())
+    return {"bytes": len(data),
+            "sha256": hashlib.sha256(data).hexdigest()}
+
+
+def _shard_across_hosts(flat: Dict[str, np.ndarray], fmt: Dict,
+                        num_hosts: int
+                        ) -> Tuple[List[Dict[str, np.ndarray]],
+                                   List[Dict[str, Dict]]]:
+    """Partition the flat array dict over ``num_hosts`` writer files.
+
+    Packed 2-D stacks (``packed_fields``) split by bucket rows, the
+    (ranks, ...) err stack by rank — both along the layout record's
+    host extents when they match, else a balanced split. Everything
+    else is written whole by one host (greedy byte balance). Returns
+    per-host ``{key: shard}`` dicts plus the manifest key records
+    (full shape, and the ``[lo, hi)`` row extent for split keys).
+    """
+    packed = set(fmt.get("packed_fields") or ())
+    layout = fmt.get("layout") or {}
+    host_arrays: List[Dict[str, np.ndarray]] = [
+        {} for _ in range(num_hosts)]
+    key_records: List[Dict[str, Dict]] = [{} for _ in range(num_hosts)]
+    loads = [0] * num_hosts
+    for key, arr in flat.items():
+        row_split = (num_hosts > 1 and arr.ndim >= 2
+                     and (key in packed or key == repack.ERR_GROUP))
+        if row_split:
+            rec_ext = layout.get("host_extents")
+            extents = (
+                [(int(lo), int(hi)) for lo, hi in rec_ext]
+                if key in packed and rec_ext is not None
+                and len(rec_ext) == num_hosts
+                and rec_ext[-1][1] == arr.shape[0]
+                else host_shard_extents(arr.shape[0], num_hosts))
+            for h, (lo, hi) in enumerate(extents):
+                if hi <= lo:
+                    continue
+                host_arrays[h][key] = arr[lo:hi]
+                key_records[h][key] = {"shape": list(arr.shape),
+                                       "rows": [lo, hi]}
+                loads[h] += arr[lo:hi].nbytes
+        else:
+            h = min(range(num_hosts), key=lambda i: loads[i])
+            host_arrays[h][key] = arr
+            key_records[h][key] = {"shape": list(arr.shape)}
+            loads[h] += arr.nbytes
+    return host_arrays, key_records
+
+
+def _assemble_shards(npz_arrays: Dict[str, Dict[str, np.ndarray]],
+                     manifest: Dict) -> Dict[str, np.ndarray]:
+    """Per-host shard dicts -> the full flat ``{key: array}`` stream.
+
+    Validates that split keys cover ``[0, shape[0])`` contiguously and
+    reassemble to the recorded full shape.
+    """
+    arrays: Dict[str, np.ndarray] = {}
+    shards: Dict[str, List[Tuple[int, int, np.ndarray, Tuple[int, ...]]]]
+    shards = {}
+    for fname, rec in manifest["files"].items():
+        if fname not in npz_arrays:
+            continue
+        loaded = npz_arrays[fname]
+        for key, krec in rec.get("keys", {}).items():
+            arr = loaded[key]
+            shape = tuple(int(d) for d in krec["shape"])
+            if "rows" in krec:
+                lo, hi = (int(x) for x in krec["rows"])
+                shards.setdefault(key, []).append((lo, hi, arr, shape))
+            else:
+                if tuple(arr.shape) != shape:
+                    raise CheckpointCorruptError(
+                        f"'{key}' in {fname} has shape {arr.shape}, "
+                        f"manifest records {shape}")
+                arrays[key] = arr
+    for key, parts in shards.items():
+        parts.sort(key=lambda t: t[0])
+        full = parts[0][3]
+        expect = 0
+        for lo, hi, arr, shape in parts:
+            if shape != full or lo != expect or arr.shape[0] != hi - lo:
+                raise CheckpointCorruptError(
+                    f"shard coverage broken for '{key}': extent "
+                    f"[{lo}, {hi}) after row {expect} of {full}")
+            expect = hi
+        if expect != full[0]:
+            raise CheckpointCorruptError(
+                f"shards of '{key}' cover {expect} rows, manifest "
+                f"records {full[0]}")
+        arrays[key] = np.concatenate([p[2] for p in parts], axis=0)
+    return arrays
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
@@ -123,22 +319,38 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: List[BaseException] = []
+        self._warned_names: set = set()
 
     # ---- save ------------------------------------------------------------
 
     def save(self, step: int, state: Any, meta: Optional[Dict] = None,
-             block: bool = False) -> None:
-        """Snapshot now, write in the background (one writer at a time)."""
+             block: bool = False,
+             format_version: Optional[int] = None) -> None:
+        """Snapshot now, write in the background (one writer at a time).
+
+        ``format_version``: on-disk layout to write — 3 (default,
+        per-host shards + manifest) or 2 (one gathered arrays.npz, for
+        migration tests / old readers). The host count for v3 comes
+        from ``meta["format"]["hosts"]`` (default 1).
+        """
+        version = int(format_version if format_version is not None
+                      else repack.FORMAT_VERSION)
+        if version not in (2, 3):
+            raise ValueError(f"unsupported checkpoint format_version "
+                             f"{version} (writable: 2, 3)")
         self.wait()                       # at most one in-flight write
         host_state = jax.tree.map(np.asarray, jax.device_get(state))
         flat = _flatten_with_paths(host_state)   # key collisions raise HERE
         meta = dict(meta or {})
         meta["step"] = int(step)
-        meta.setdefault("format", {"version": repack.FORMAT_VERSION})
+        fmt = dict(meta.get("format") or {})
+        fmt["version"] = version          # describe what is written
+        meta["format"] = fmt
+        num_hosts = max(int(fmt.get("hosts") or 1), 1)
 
         def write():
             try:
-                self._write(step, flat, meta)
+                self._write(step, flat, meta, version, num_hosts)
                 self._rotate()
             except BaseException as e:     # surfaced on next wait()
                 self._error.append(e)
@@ -150,20 +362,52 @@ class CheckpointManager:
             self.wait()
 
     def _write(self, step: int, flat: Dict[str, np.ndarray],
-               meta: Dict) -> None:
+               meta: Dict, version: int, num_hosts: int) -> None:
         final = os.path.join(self.directory, f"step_{step:010d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-        with open(os.path.join(tmp, "meta.json"), "w") as fh:
-            json.dump(meta, fh, indent=1, default=_json_default)
+        if version == 2:
+            path = os.path.join(tmp, "arrays.npz")
+            np.savez(path, **flat)
+            _fsync_path(path)
+            _write_json_synced(os.path.join(tmp, _META), meta,
+                               default=_json_default)
+        else:
+            host_arrays, key_records = _shard_across_hosts(
+                flat, meta.get("format") or {}, num_hosts)
+            files: Dict[str, Dict] = {}
+            for h, arrays in enumerate(host_arrays):
+                fname = f"arrays_host{h}.npz"
+                # serialize to memory once: the checksum is computed
+                # from the same bytes that hit the disk, without
+                # re-reading the file (a tee-hash around the file
+                # object would hash stale bytes — zipfile seeks back
+                # to patch local headers on seekable streams)
+                buf = io.BytesIO()
+                np.savez(buf, **arrays)
+                files[fname] = {
+                    **_write_bytes_synced(os.path.join(tmp, fname),
+                                          buf.getvalue()),
+                    "keys": key_records[h]}
+            meta_bytes = json.dumps(meta, indent=1,
+                                    default=_json_default).encode()
+            files[_META] = _write_bytes_synced(
+                os.path.join(tmp, _META), meta_bytes)
+            _write_json_synced(
+                os.path.join(tmp, _MANIFEST),
+                {"manifest_version": 1, "format_version": version,
+                 "step": int(step), "hosts": num_hosts, "files": files})
         with open(os.path.join(tmp, _DONE), "w") as fh:
             fh.write("ok")
+            fh.flush()
+            os.fsync(fh.fileno())
+        _fsync_path(tmp)                  # directory entries durable
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)             # atomic commit
+        _fsync_path(self.directory)       # ... and the rename itself
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -183,19 +427,105 @@ class CheckpointManager:
     def all_steps(self) -> List[int]:
         out = []
         for name in os.listdir(self.directory):
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            try:
+                s = int(name[5:])
+            except ValueError:
+                if name not in self._warned_names:
+                    self._warned_names.add(name)
+                    logger.warning(
+                        "ignoring non-checkpoint entry %r in %s (does "
+                        "not parse as step_<N>)", name, self.directory)
+                continue
             path = os.path.join(self.directory, name)
-            if (name.startswith("step_") and not name.endswith(".tmp")
-                    and os.path.exists(os.path.join(path, _DONE))):
-                out.append(int(name[5:]))
+            if os.path.exists(os.path.join(path, _DONE)):
+                out.append(s)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _validate_manifest(self, path: str) -> Dict:
+        """Load + verify manifest.json: files exist, sizes and sha256
+        checksums match. Raises :class:`CheckpointCorruptError`."""
+        man_path = os.path.join(path, _MANIFEST)
+        if not os.path.exists(man_path):
+            raise CheckpointCorruptError(
+                f"{path} holds per-host shard files but no {_MANIFEST}")
+        try:
+            with open(man_path) as fh:
+                manifest = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable {_MANIFEST} in {path}: {e}") from e
+        for fname, rec in manifest.get("files", {}).items():
+            fpath = os.path.join(path, fname)
+            if not os.path.exists(fpath):
+                raise CheckpointCorruptError(
+                    f"manifest names missing file '{fname}' in {path}")
+            size = os.path.getsize(fpath)
+            if size != int(rec["bytes"]):
+                raise CheckpointCorruptError(
+                    f"'{fname}' is {size} bytes, manifest records "
+                    f"{rec['bytes']} (truncated?)")
+            digest = _sha256(fpath)
+            if digest != rec["sha256"]:
+                raise CheckpointCorruptError(
+                    f"content checksum mismatch for '{fname}': "
+                    f"{digest[:12]}... != recorded "
+                    f"{rec['sha256'][:12]}...")
+        return manifest
+
+    def _load_step(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Read one committed step into (flat arrays, meta).
+
+        Raises FileNotFoundError when the step was never committed and
+        :class:`CheckpointCorruptError` when its content fails
+        validation (manifest mismatch, unreadable files).
+        """
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        if not os.path.exists(os.path.join(path, _DONE)):
+            raise FileNotFoundError(f"checkpoint {path} incomplete")
+        host_files = sorted(glob.glob(
+            os.path.join(path, "arrays_host*.npz")))
+        v3 = host_files or os.path.exists(os.path.join(path, _MANIFEST))
+        try:
+            if v3:
+                manifest = self._validate_manifest(path)
+                npz_arrays: Dict[str, Dict[str, np.ndarray]] = {}
+                for fname, rec in manifest["files"].items():
+                    if not fname.endswith(".npz"):
+                        continue
+                    with np.load(os.path.join(path, fname)) as z:
+                        loaded = {k: z[k] for k in z.files}
+                    if set(loaded) != set(rec.get("keys", {})):
+                        raise CheckpointCorruptError(
+                            f"'{fname}' holds keys "
+                            f"{sorted(loaded)}, manifest records "
+                            f"{sorted(rec.get('keys', {}))}")
+                    npz_arrays[fname] = loaded
+                arrays = _assemble_shards(npz_arrays, manifest)
+            else:
+                arrays_path = os.path.join(path, "arrays.npz")
+                if not os.path.exists(arrays_path):
+                    raise CheckpointCorruptError(
+                        f"{path} holds neither arrays.npz nor per-host "
+                        f"shard files")
+                with np.load(arrays_path) as z:
+                    arrays = {k: z[k] for k in z.files}
+            with open(os.path.join(path, _META)) as fh:
+                meta = json.load(fh, object_hook=_meta_hook)
+        except (OSError, zipfile.BadZipFile, json.JSONDecodeError,
+                KeyError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable checkpoint {path}: {e!r}") from e
+        return arrays, meta
+
     def restore(self, template: Any, step: Optional[int] = None,
-                expected_overlap: Optional[str] = None
-                ) -> Tuple[Any, Dict]:
+                expected_overlap: Optional[str] = None,
+                allow_cast: bool = False) -> Tuple[Any, Dict]:
         """Returns (state shaped like ``template``, meta).
 
         The template may be differently *sharded* than at save time
@@ -207,6 +537,17 @@ class CheckpointManager:
         Template leaves only need ``.shape``/``.dtype`` —
         ShapeDtypeStructs work.
 
+        Durability: a step whose manifest validation fails (truncated
+        or bit-flipped shard, missing manifest) is rejected; with
+        ``step=None`` the restore falls back to the previous committed
+        step (logged loudly), with an explicit ``step`` the
+        :class:`CheckpointCorruptError` propagates.
+
+        ``allow_cast``: restoring into a template whose leaf dtype
+        cannot represent the saved values exactly (fp32 checkpoint into
+        a bf16 template) raises unless this is True; any dtype cast at
+        all is logged.
+
         ``expected_overlap``: the restoring config's
         ``HetConfig.overlap`` mode. The checkpoint records which mode
         wrote it (``meta["format"]["overlap"]``); a mismatch still
@@ -215,16 +556,30 @@ class CheckpointManager:
         reverse) translation is a real layout change the operator
         should see.
         """
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        explicit = step is not None
+        candidates = ([step] if explicit
+                      else list(reversed(self.all_steps())))
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        path = os.path.join(self.directory, f"step_{step:010d}")
-        if not os.path.exists(os.path.join(path, _DONE)):
-            raise FileNotFoundError(f"checkpoint {path} incomplete")
-        with np.load(os.path.join(path, "arrays.npz")) as z:
-            arrays = {k: z[k] for k in z.files}
-        with open(os.path.join(path, "meta.json")) as fh:
-            meta = json.load(fh, object_hook=_meta_hook)
+        last_err: Optional[BaseException] = None
+        arrays = meta = None
+        chosen = None
+        for s in candidates:
+            try:
+                arrays, meta = self._load_step(s)
+                chosen = s
+                break
+            except CheckpointCorruptError as e:
+                if explicit:
+                    raise
+                logger.warning(
+                    "checkpoint step_%010d failed validation (%s) — "
+                    "falling back to the previous committed step", s, e)
+                last_err = e
+        if chosen is None:
+            raise CheckpointCorruptError(
+                f"no restorable checkpoint in {self.directory}: every "
+                f"committed step failed validation") from last_err
         fmt = meta.get("format") or {}
         saved_overlap = fmt.get("overlap")
         if expected_overlap is not None and saved_overlap is not None \
@@ -234,6 +589,7 @@ class CheckpointManager:
                 "overlap='%s' but is being restored into overlap='%s' "
                 "— optimizer state will be repacked through the flat "
                 "stream (bit-exact; see checkpoint/repack.py)",
-                step, saved_overlap, expected_overlap)
+                chosen, saved_overlap, expected_overlap)
         arrays = repack.adapt_arrays(arrays, template, meta.get("format"))
-        return _unflatten_like(template, arrays), meta
+        return _unflatten_like(template, arrays, allow_cast=allow_cast), \
+            meta

@@ -30,9 +30,12 @@ reduction rank) repacks the same way per rank when the rank count is
 unchanged. Across a rank-count change the per-rank residuals have no
 exact image (the ranks that produced them no longer exist); the total
 outstanding residual is what re-enters future gradients, so the rank
-streams are summed and carried by rank 0 — the conserved quantity
-survives, the per-rank split does not (documented trade; fp32 runs
-without error feedback repack bit-exactly in every direction).
+streams are summed and the sum is partitioned element-wise into the
+destination ranks' contiguous stream extents — the conserved quantity
+survives bit-exactly AND stays distributed (no rank parked with the
+whole residual; the per-rank split itself is not recoverable —
+documented trade; fp32 runs without error feedback repack bit-exactly
+in every direction).
 
 ``adapt_arrays`` is the entry point: it rewrites the flattened
 ``{path-key: array}`` dict loaded from ``arrays.npz`` so it matches the
@@ -54,11 +57,14 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 from jax import tree_util as jtu
 
-# Bump when the on-disk layout of arrays.npz / the format block in
-# meta.json changes incompatibly. Version 1 = unescaped ad-hoc keys,
-# stringified meta (pre-repack); version 2 = escaped keys + structured
-# meta + layout records.
-FORMAT_VERSION = 2
+# Bump when the on-disk layout / the format block in meta.json changes
+# incompatibly. Version 1 = unescaped ad-hoc keys, stringified meta
+# (pre-repack); version 2 = escaped keys + structured meta + layout
+# records, one gathered arrays.npz; version 3 = per-host shard files
+# (arrays_host<k>.npz) + a crash-consistent, checksummed manifest.json
+# (checkpoint/checkpoint.py). Version 2 checkpoints still load; the
+# array key scheme is unchanged since version 2.
+FORMAT_VERSION = 3
 
 MOMENT_GROUPS = ("opt/m", "opt/v")
 ERR_GROUP = "err"
@@ -220,14 +226,27 @@ def _redistribute_ranks(streams: np.ndarray, target_ranks: int
     """(ranks, n) residual streams -> (target_ranks, n).
 
     Same rank count: identity (bit-exact). Different: the per-rank
-    residuals have no exact image — conserve their SUM on rank 0 (the
-    quantity that re-enters future gradients) and zero the rest.
+    residuals have no exact image (the producing ranks are gone), so
+    the conserved quantity is their SUM — the total outstanding
+    residual that re-enters future gradients. The sum is partitioned
+    element-wise into the destination ranks' contiguous stream extents:
+    rank ``r`` carries the summed residual over its extent and zero
+    elsewhere, so every element lands on exactly one rank (the total is
+    conserved bit-exactly) and the compression state stays DISTRIBUTED.
+    The old behavior parked the whole sum on rank 0, which skewed rank
+    0's quantization scales on the first int8 exchanges after a re-mesh
+    resume while every other rank restarted from zero residual.
     """
+    from repro.core.buckets import host_shard_extents
+
     ranks = streams.shape[0]
     if ranks == target_ranks:
         return streams
+    total = streams.sum(axis=0)
     out = np.zeros((target_ranks, streams.shape[1]), streams.dtype)
-    out[0] = streams.sum(axis=0)
+    for r, (lo, hi) in enumerate(host_shard_extents(streams.shape[1],
+                                                    target_ranks)):
+        out[r, lo:hi] = total[lo:hi]
     return out
 
 

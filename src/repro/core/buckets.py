@@ -156,6 +156,32 @@ def build_layout(tree: Any, *, bucket_mb: float = 4.0,
                         bucket_elems=bucket_elems, num_buckets=num_buckets)
 
 
+def host_shard_extents(n: int, hosts: int) -> Tuple[Tuple[int, int], ...]:
+    """Balanced contiguous ``[lo, hi)`` extents splitting ``n`` rows
+    over ``hosts`` writers.
+
+    The canonical split behind the v3 per-host checkpoint shards: host
+    ``k`` of the save writes bucket rows ``extents[k]`` of each packed
+    stack into its own ``arrays_host<k>.npz`` (checkpoint/checkpoint.py)
+    and the extents are recorded in the layout record so a restore can
+    validate reassembly. Also reused element-wise by
+    ``checkpoint/repack.py`` to distribute the summed error-feedback
+    residual across a NEW rank count (sum conserved, no rank parked
+    with the whole residual). Empty extents (``hi == lo``) appear when
+    ``hosts > n``.
+    """
+    if hosts <= 0:
+        raise ValueError(f"hosts must be positive, got {hosts}")
+    base, rem = divmod(int(n), hosts)
+    out = []
+    lo = 0
+    for h in range(hosts):
+        hi = lo + base + (1 if h < rem else 0)
+        out.append((lo, hi))
+        lo = hi
+    return tuple(out)
+
+
 # Bump when the serialized layout record changes incompatibly
 # (checkpoint/repack.py validates it on restore).
 LAYOUT_VERSION = 1
@@ -178,14 +204,19 @@ def layout_fingerprint(record: Dict) -> str:
 
 
 def layout_record(layout: BucketLayout,
-                  leaf_paths: Optional[Sequence[str]] = None) -> Dict:
+                  leaf_paths: Optional[Sequence[str]] = None,
+                  hosts: Optional[int] = None) -> Dict:
     """JSON-able versioned description of a :class:`BucketLayout`.
 
     Saved into checkpoint ``meta.json`` so a restore can (a) detect a
     grid mismatch by fingerprint and (b) strictly validate the flat
     stream length when repacking. ``leaf_paths`` (the escaped
     checkpoint key path of every leaf, see ``repack.path_key``) records
-    which parameter each stream range belongs to.
+    which parameter each stream range belongs to. ``hosts`` records the
+    v3 per-host shard split: ``host_extents[k]`` is the bucket-row
+    range host ``k`` writes into its own ``arrays_host<k>.npz``.
+    Neither is part of the fingerprint — they describe provenance and
+    the write-time sharding, not the grid.
     """
     rec: Dict[str, Any] = {
         "version": LAYOUT_VERSION,
@@ -199,6 +230,11 @@ def layout_record(layout: BucketLayout,
     }
     if leaf_paths is not None:
         rec["leaf_paths"] = [str(p) for p in leaf_paths]
+    if hosts is not None:
+        rec["hosts"] = int(hosts)
+        rec["host_extents"] = [
+            [lo, hi]
+            for lo, hi in host_shard_extents(layout.num_buckets, hosts)]
     rec["fingerprint"] = layout_fingerprint(rec)
     return rec
 

@@ -14,7 +14,15 @@ Two regimes, in escalation order:
    and re-plan capacities. Because data order derives from
    (seed, epoch, global_step) — never from rank count — and aggregation
    divides by summed weight, the *global* sample stream and the loss
-   are identical across any re-mesh: training resumes exactly.
+   are identical across any re-mesh: training resumes exactly. The
+   checkpoint side holds up its end: v3 saves are per-host shard files
+   behind a checksummed manifest (node loss is the common case, so a
+   half-written or bit-rotted step is *rejected* and restore falls back
+   to the previous committed one), packed optimizer state repacks into
+   the new mesh's bucket grid, and the summed int8 error-feedback
+   residual is distributed over the new ranks' stream extents — sum
+   conserved, no rank restarts carrying the whole fleet's residual
+   (checkpoint/checkpoint.py, checkpoint/repack.py).
 
 This module computes the re-mesh decision + new configuration; the
 driver (launch/train.py) performs reload/rebuild.

@@ -214,12 +214,17 @@ def checkpoint_format(model: Model, tcfg: TrainConfig, mesh: Mesh) -> Dict:
     ``BucketLayout`` record + fingerprint describing that grid, so a
     restore into ANY other cell can translate through the flat stream
     (checkpoint/repack.py) instead of failing on shape mismatch.
+    ``hosts`` is the v3 per-host shard count (one writer per pod — the
+    fleet unit that owns its own disk); the layout record carries the
+    matching bucket-row extents each host writes.
     """
     from repro.checkpoint import repack
 
+    hosts = int(mesh.shape["pod"]) if "pod" in mesh.axis_names else 1
     fmt: Dict[str, Any] = {"version": repack.FORMAT_VERSION,
                            "state": "pytree", "packed_fields": [],
                            "layout": None,
+                           "hosts": hosts,
                            # which HetConfig.overlap mode wrote this
                            # checkpoint — restore logs (never silently
                            # adapts) when the restore target differs
@@ -230,7 +235,7 @@ def checkpoint_format(model: Model, tcfg: TrainConfig, mesh: Mesh) -> Dict:
                                       jax.random.PRNGKey(0))
         paths = [repack.path_key(p) for p, _ in
                  jax.tree_util.tree_flatten_with_path(params_shape)[0]]
-        rec = bkt.layout_record(lo, leaf_paths=paths)
+        rec = bkt.layout_record(lo, leaf_paths=paths, hosts=hosts)
         fmt.update(state="packed",
                    packed_fields=["opt/m", "opt/v"],
                    layout=rec,

@@ -233,128 +233,157 @@ def train(args) -> Dict[str, float]:
     step = start_step
     losses = []
     t_start = time.time()
-    while step < args.steps:
-        try:
-            with compat.set_mesh(mesh):
-                while step < args.steps:
-                    consumed = 0
-                    for raw in loader.iter_epoch(epoch):
-                        consumed += 1
-                        if consumed <= batch_in_epoch:
-                            continue          # resume mid-epoch: skip
+    body_raised = False
+    try:
+        while step < args.steps:
+            try:
+                with compat.set_mesh(mesh):
+                    while step < args.steps:
+                        consumed = 0
+                        for raw in loader.iter_epoch(epoch):
+                            consumed += 1
+                            if consumed <= batch_in_epoch:
+                                continue      # resume mid-epoch: skip
+                            if step >= args.steps:
+                                break
+                            # hetsampler pads the *labels*: inputs are
+                            # the shifted view
+                            batch = {
+                                "inputs": jnp.asarray(
+                                    raw["inputs"][:, :args.seq_len]),
+                                "labels": jnp.asarray(
+                                    raw["labels"][:, :args.seq_len]),
+                                "weights": jnp.asarray(
+                                    raw["weights"][:, :args.seq_len]),
+                            }
+                            batch = jax.device_put(batch, bspecs)
+                            t0 = time.time()
+                            state, metrics = step_fn(state, batch)
+                            loss = float(metrics["loss"])
+                            dt = time.time() - t0
+                            losses.append(loss)
+                            step += 1
+                            batch_in_epoch = consumed
+                            # per-rank step times: on real fleets each
+                            # host reports; here every rank shares the
+                            # host clock. --kill-pod stops the victim's
+                            # reports.
+                            times = [dt] * n_dp
+                            if kill is not None and step >= kill[1]:
+                                for r in range(n_dp):
+                                    if r // topo.data_per_pod == kill[0]:
+                                        times[r] = None
+                            monitor.observe(times)
+                            if monitor.should_replan():
+                                plan = monitor.replan(plan)
+                                sampler.set_plan(plan)
+                            if step % args.log_every == 0:
+                                print(f"[train] step {step:5d} loss "
+                                      f"{loss:.4f} ({dt * 1e3:.0f} ms)")
+                            if tcfg.ckpt_every and \
+                                    step % tcfg.ckpt_every == 0:
+                                mgr.save(step, jax.device_get(state),
+                                         meta=save_meta())
                         if step >= args.steps:
                             break
-                        # hetsampler pads the *labels*: inputs are the
-                        # shifted view
-                        batch = {
-                            "inputs": jnp.asarray(
-                                raw["inputs"][:, :args.seq_len]),
-                            "labels": jnp.asarray(
-                                raw["labels"][:, :args.seq_len]),
-                            "weights": jnp.asarray(
-                                raw["weights"][:, :args.seq_len]),
-                        }
-                        batch = jax.device_put(batch, bspecs)
-                        t0 = time.time()
-                        state, metrics = step_fn(state, batch)
-                        loss = float(metrics["loss"])
-                        dt = time.time() - t0
-                        losses.append(loss)
-                        step += 1
-                        batch_in_epoch = consumed
-                        # per-rank step times: on real fleets each host
-                        # reports; here every rank shares the host clock.
-                        # --kill-pod stops the victim's reports.
-                        times = [dt] * n_dp
-                        if kill is not None and step >= kill[1]:
-                            for r in range(n_dp):
-                                if r // topo.data_per_pod == kill[0]:
-                                    times[r] = None
-                        monitor.observe(times)
-                        if monitor.should_replan():
-                            plan = monitor.replan(plan)  # RemeshRequired
-                            sampler.set_plan(plan)
-                        if step % args.log_every == 0:
-                            print(f"[train] step {step:5d} loss "
-                                  f"{loss:.4f} ({dt * 1e3:.0f} ms)")
-                        if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
-                            mgr.save(step, jax.device_get(state),
-                                     meta=save_meta())
-                    if step >= args.steps:
-                        break
-                    epoch += 1
-                    batch_in_epoch = 0
-        except RemeshRequired as e:
-            mgr.wait()                     # flush any in-flight write
-            if mgr.latest_step() is None:
-                raise SystemExit(
-                    f"[train] remesh required ({e}) but no checkpoint "
-                    f"exists to restart from — set --ckpt-every") from e
-            dead = set(monitor.dead_ranks().tolist())
-            dpp = topo.data_per_pod
-            alive = [p for p in range(topo.pods)
-                     if not all(r in dead
-                                for r in range(p * dpp, (p + 1) * dpp))]
-            caps = tcfg.het.capacities
-            caps_per_pod = ([float(np.mean(caps[p * dpp:(p + 1) * dpp]))
-                             for p in range(topo.pods)] if caps else None)
-            decision = elastic.plan_remesh(
-                topo, alive, plan.global_rows, caps_per_pod,
-                round_buffer_to=max(tcfg.het.accum_steps, 1))
-            print(f"[train] remesh: {decision.reason}")
-            if not decision.restart_required:
-                # every pod still has live ranks, yet soft replanning
-                # just FAILED (that is what raised RemeshRequired) —
-                # re-planning from static capacities would assign real
-                # rows to the dead ranks and loop forever. Re-mesh
-                # granularity is whole pods; escalate loudly.
-                raise SystemExit(
-                    f"[train] ranks {sorted(dead)} are dead but no "
-                    f"whole pod is lost, and soft replanning cannot "
-                    f"absorb them ({e}); shrink the global batch or "
-                    f"drain the affected pod") from e
-            if not elastic.validate_resume_equivalence(plan,
-                                                       decision.plan):
-                raise SystemExit(
-                    "[train] remesh produced a plan that consumes a "
-                    "different global record stream") from e
-            topo = decision.topology
-            mesh = mesh_for_topology(topo)
-            plan = decision.plan
-            n_dp = dp_size(mesh)
-            # capacities were indexed by the OLD rank numbering — after
-            # the re-mesh the survivors are renumbered, so the stale
-            # list would skew any later replan; the plan from
-            # plan_remesh is authoritative now. accum_steps scales to
-            # preserve the per-microbatch grid across the DP-width
-            # change: the resumed trajectory stays bit-identical (see
-            # elastic.RemeshDecision.accum_scale).
-            tcfg = dataclasses.replace(
-                tcfg, het=dataclasses.replace(
-                    tcfg.het, capacities=(),
-                    accum_steps=(tcfg.het.accum_steps *
-                                 decision.accum_scale)))
-            if decision.accum_scale > 1:
-                print(f"[train] accum_steps scaled x"
-                      f"{decision.accum_scale} to preserve the "
-                      f"microbatch grid")
-            step_fn, sampler, loader, bspecs, fmt = build_runtime(mesh,
-                                                                  plan)
-            state, (step, epoch, batch_in_epoch) = restore_state(mesh,
-                                                                 plan)
-            # the rollback discards the post-checkpoint trajectory:
-            # drop its loss entries so the final summary reports only
-            # steps that are part of the resumed run
-            del losses[max(step - start_step, 0):]
-            monitor = StragglerMonitor(
-                num_ranks=n_dp, ema_decay=tcfg.het.straggler_ema,
-                replan_interval=tcfg.het.replan_interval)
-            kill = None                    # the dead pod is gone
-            print(f"[train] re-meshed to "
-                  f"{dict(zip(mesh.axis_names, mesh.devices.shape))}, "
-                  f"resumed step {step} (epoch {epoch}, batch "
-                  f"{batch_in_epoch})")
-    mgr.save(step, jax.device_get(state), meta=save_meta(), block=True)
+                        epoch += 1
+                        batch_in_epoch = 0
+            except RemeshRequired as e:
+                mgr.wait()                 # flush any in-flight write
+                if mgr.latest_step() is None:
+                    raise SystemExit(
+                        f"[train] remesh required ({e}) but no "
+                        f"checkpoint exists to restart from — set "
+                        f"--ckpt-every") from e
+                dead = set(monitor.dead_ranks().tolist())
+                dpp = topo.data_per_pod
+                alive = [p for p in range(topo.pods)
+                         if not all(r in dead
+                                    for r in range(p * dpp,
+                                                   (p + 1) * dpp))]
+                caps = tcfg.het.capacities
+                caps_per_pod = (
+                    [float(np.mean(caps[p * dpp:(p + 1) * dpp]))
+                     for p in range(topo.pods)] if caps else None)
+                decision = elastic.plan_remesh(
+                    topo, alive, plan.global_rows, caps_per_pod,
+                    round_buffer_to=max(tcfg.het.accum_steps, 1))
+                print(f"[train] remesh: {decision.reason}")
+                if not decision.restart_required:
+                    # every pod still has live ranks, yet soft
+                    # replanning just FAILED (that is what raised
+                    # RemeshRequired) — re-planning from static
+                    # capacities would assign real rows to the dead
+                    # ranks and loop forever. Re-mesh granularity is
+                    # whole pods; escalate loudly.
+                    raise SystemExit(
+                        f"[train] ranks {sorted(dead)} are dead but no "
+                        f"whole pod is lost, and soft replanning cannot "
+                        f"absorb them ({e}); shrink the global batch or "
+                        f"drain the affected pod") from e
+                if not elastic.validate_resume_equivalence(plan,
+                                                           decision.plan):
+                    raise SystemExit(
+                        "[train] remesh produced a plan that consumes "
+                        "a different global record stream") from e
+                topo = decision.topology
+                mesh = mesh_for_topology(topo)
+                plan = decision.plan
+                n_dp = dp_size(mesh)
+                # capacities were indexed by the OLD rank numbering —
+                # after the re-mesh the survivors are renumbered, so
+                # the stale list would skew any later replan; the plan
+                # from plan_remesh is authoritative now. accum_steps
+                # scales to preserve the per-microbatch grid across
+                # the DP-width change: the resumed trajectory stays
+                # bit-identical (see elastic.RemeshDecision.accum_scale).
+                tcfg = dataclasses.replace(
+                    tcfg, het=dataclasses.replace(
+                        tcfg.het, capacities=(),
+                        accum_steps=(tcfg.het.accum_steps *
+                                     decision.accum_scale)))
+                if decision.accum_scale > 1:
+                    print(f"[train] accum_steps scaled x"
+                          f"{decision.accum_scale} to preserve the "
+                          f"microbatch grid")
+                step_fn, sampler, loader, bspecs, fmt = build_runtime(
+                    mesh, plan)
+                state, (step, epoch, batch_in_epoch) = restore_state(
+                    mesh, plan)
+                # the rollback discards the post-checkpoint trajectory:
+                # drop its loss entries so the final summary reports
+                # only steps that are part of the resumed run
+                del losses[max(step - start_step, 0):]
+                monitor = StragglerMonitor(
+                    num_ranks=n_dp, ema_decay=tcfg.het.straggler_ema,
+                    replan_interval=tcfg.het.replan_interval)
+                kill = None                # the dead pod is gone
+                print(f"[train] re-meshed to "
+                      f"{dict(zip(mesh.axis_names, mesh.devices.shape))}"
+                      f", resumed step {step} (epoch {epoch}, batch "
+                      f"{batch_in_epoch})")
+        mgr.save(step, jax.device_get(state), meta=save_meta(),
+                 block=True)
+    except BaseException:
+        body_raised = True
+        raise
+    finally:
+        # join the async writer on EVERY exit path (clean, SystemExit
+        # from a failed remesh, any step error): the daemon thread
+        # would otherwise die with the process and silently lose the
+        # run's final checkpoint. On a clean exit a deferred write
+        # error must PROPAGATE (the final checkpoint did not land);
+        # while another exception is already unwinding, don't mask it
+        # — print and let the original continue. (sys.exc_info() can't
+        # make this call here: inside the except handler it reports
+        # the wait error itself, so the flag is set by the body.)
+        try:
+            mgr.wait()
+        except BaseException as werr:
+            if not body_raised:
+                raise
+            print(f"[train] WARNING: checkpoint writer failed during "
+                  f"shutdown: {werr!r}")
     wall = time.time() - t_start
     if not losses:                       # resumed an already-done run
         print(f"[train] nothing to do: checkpoint already at step "

@@ -9,6 +9,8 @@ a re-meshed pod count, and continue bit-identically — runs under a
 multi-device mesh in a subprocess, per the project convention that only
 children force device counts.
 """
+import json
+import logging
 import os
 import subprocess
 import sys
@@ -20,7 +22,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import repack
-from repro.checkpoint.checkpoint import CheckpointManager
+from repro.checkpoint.checkpoint import (CheckpointCorruptError,
+                                         CheckpointManager)
 from repro.configs.base import OptimizerConfig
 from repro.core import buckets as bkt
 from repro.core import elastic
@@ -236,13 +239,268 @@ def test_err_state_repack_same_ranks_exact_rank_change_conserves(
     got1, _ = mgr.restore(tmpl_one)
     np.testing.assert_allclose(
         np.asarray(got1.err).reshape(1, -1)[0, :lo_a.total],
-        flat.sum(axis=0), rtol=1e-6)
+        flat.sum(axis=0), rtol=1e-6)   # 1 target rank: sum = its extent
     # a checkpoint without residual state restores with FRESH zeros
     mgr2 = CheckpointManager(str(tmp_path / "noerr"))
     mgr2.save(1, _mk_state(params, adam.AdamState(
         step=jnp.int32(1), m=zb, v=zb)), block=True)
     fresh, _ = mgr2.restore(tmpl_same)
     assert not np.asarray(fresh.err).any()
+
+
+# --------------------------------------------------------------------------
+# v3 per-host sharded saves + crash-consistent manifests (tentpole)
+# --------------------------------------------------------------------------
+
+
+def _packed_state(lo, seed=0, err_ranks=2):
+    params = _tree(seed)
+    m = bkt.pack_buckets(
+        jax.tree.map(lambda p: 0.3 * p + 0.01, _tree(seed + 1)), lo)
+    v = bkt.pack_buckets(
+        jax.tree.map(lambda p: jnp.abs(p) * 0.2, _tree(seed + 2)), lo)
+    err = np.zeros((err_ranks, lo.num_buckets, lo.bucket_elems),
+                   np.float32)
+    rng = np.random.default_rng(seed)
+    err.reshape(err_ranks, -1)[:, :lo.total] = rng.standard_normal(
+        (err_ranks, lo.total)).astype(np.float32)
+    return _mk_state(params, adam.AdamState(step=jnp.int32(3), m=m, v=v),
+                     err=err)
+
+
+def _fmt_for(lo, hosts):
+    return {"version": repack.FORMAT_VERSION, "state": "packed",
+            "packed_fields": ["opt/m", "opt/v"],
+            "layout": bkt.layout_record(lo, hosts=hosts),
+            "hosts": hosts, "overlap": "buckets"}
+
+
+def test_host_shard_extents_balanced_and_recorded():
+    assert bkt.host_shard_extents(10, 3) == ((0, 4), (4, 7), (7, 10))
+    assert bkt.host_shard_extents(2, 4) == ((0, 1), (1, 2), (2, 2),
+                                            (2, 2))
+    with pytest.raises(ValueError, match="hosts"):
+        bkt.host_shard_extents(5, 0)
+    lo = bkt.build_layout(_tree(), bucket_mb=1e-4, multiple_of=8)
+    rec = bkt.layout_record(lo, hosts=2)
+    assert rec["hosts"] == 2
+    assert [tuple(e) for e in rec["host_extents"]] == \
+        list(bkt.host_shard_extents(lo.num_buckets, 2))
+    # extents are write-time provenance, not grid: fingerprint unchanged
+    assert rec["fingerprint"] == bkt.layout_record(lo)["fingerprint"]
+
+
+def test_v3_sharded_save_matches_gathered_v2_bit_exact(tmp_path):
+    """Tentpole acceptance: each host writes only its own shard file,
+    the manifest records sizes/checksums/extents, and restore through
+    the assembled stream is bit-identical to a gathered v2 save of the
+    same state — into the same grid, a re-gridded packed layout, and
+    the pytree (non-overlap) layout."""
+    params = _tree(0)
+    lo_a = bkt.build_layout(params, bucket_mb=1e-4, multiple_of=8)
+    lo_b = bkt.build_layout(params, bucket_mb=4e-4, multiple_of=32)
+    state = _packed_state(lo_a)
+    fmt = _fmt_for(lo_a, hosts=2)
+
+    mgr2 = CheckpointManager(str(tmp_path / "v2"))
+    mgr2.save(1, state, meta={"format": dict(fmt)}, format_version=2,
+              block=True)
+    mgr3 = CheckpointManager(str(tmp_path / "v3"))
+    mgr3.save(1, state, meta={"format": dict(fmt)}, block=True)
+
+    d3 = tmp_path / "v3" / "step_0000000001"
+    assert (d3 / "manifest.json").exists()
+    assert (d3 / "arrays_host0.npz").exists()
+    assert (d3 / "arrays_host1.npz").exists()
+    assert not (d3 / "arrays.npz").exists()
+    d2 = tmp_path / "v2" / "step_0000000001"
+    assert (d2 / "arrays.npz").exists()
+    assert not (d2 / "manifest.json").exists()
+
+    man = json.loads((d3 / "manifest.json").read_text())
+    assert man["hosts"] == 2 and man["format_version"] == 3
+    assert "meta.json" in man["files"]
+    for fname, rec in man["files"].items():
+        assert (d3 / fname).stat().st_size == rec["bytes"]
+        assert len(rec["sha256"]) == 64
+    # packed stacks split by bucket rows along the layout extents,
+    # the err stack by rank
+    h0 = man["files"]["arrays_host0.npz"]["keys"]
+    h1 = man["files"]["arrays_host1.npz"]["keys"]
+    ext = fmt["layout"]["host_extents"]
+    assert h0["opt/m"]["rows"] == ext[0]
+    assert h1["opt/m"]["rows"] == ext[1]
+    assert h0["err"]["rows"] == [0, 1] and h1["err"]["rows"] == [1, 2]
+
+    zb_a = jnp.zeros((lo_a.num_buckets, lo_a.bucket_elems))
+    zb_b = jnp.zeros((lo_b.num_buckets, lo_b.bucket_elems))
+    err_a = np.zeros((2, lo_a.num_buckets, lo_a.bucket_elems),
+                     np.float32)
+    err_b = np.zeros((2, lo_b.num_buckets, lo_b.bucket_elems),
+                     np.float32)
+    templates = {
+        "packed-same": _mk_state(params, adam.AdamState(
+            step=jnp.int32(0), m=zb_a, v=zb_a), err=err_a),
+        "packed-regrid": _mk_state(params, adam.AdamState(
+            step=jnp.int32(0), m=zb_b, v=zb_b), err=err_b),
+        "pytree": _mk_state(params, adam.AdamState(
+            step=jnp.int32(0),
+            m=jax.tree.map(jnp.zeros_like, params),
+            v=jax.tree.map(jnp.zeros_like, params)), err=err_a),
+    }
+    for tag, tmpl in templates.items():
+        a, _ = mgr2.restore(tmpl)
+        b, _ = mgr3.restore(tmpl)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=tag)
+
+
+def test_v2_to_v3_migration_roundtrip_bit_exact(tmp_path):
+    """A legacy gathered v2 checkpoint restores, re-saves as sharded
+    v3, and restores again — every leaf bit-identical to the source."""
+    params = _tree(0)
+    lo = bkt.build_layout(params, bucket_mb=1e-4, multiple_of=8)
+    state = _packed_state(lo)
+    fmt = _fmt_for(lo, hosts=2)
+    tmpl = jax.tree.map(np.zeros_like, jax.device_get(state))
+
+    old = CheckpointManager(str(tmp_path / "old"))
+    old.save(1, state, meta={"format": dict(fmt)}, format_version=2,
+             block=True)
+    from_v2, meta_v2 = old.restore(tmpl)
+    assert meta_v2["format"]["version"] == 2
+
+    new = CheckpointManager(str(tmp_path / "new"))
+    new.save(1, from_v2, meta={"format": dict(fmt)}, block=True)
+    from_v3, meta_v3 = new.restore(tmpl)
+    assert meta_v3["format"]["version"] == 3
+    for x, y in zip(jax.tree.leaves(jax.device_get(state)),
+                    jax.tree.leaves(from_v3)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("corrupt", ["truncate", "flip", "del_manifest"])
+def test_v3_fault_injection_rejects_step_and_falls_back(tmp_path,
+                                                        corrupt, caplog):
+    """Durability satellite: truncate a shard / flip a byte / delete
+    manifest.json after commit — restore rejects the step via the
+    manifest validation and falls back to the previous committed one;
+    an explicitly requested corrupt step raises."""
+    params = _tree(0)
+    lo = bkt.build_layout(params, bucket_mb=1e-4, multiple_of=8)
+    fmt = _fmt_for(lo, hosts=2)
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    s1 = _packed_state(lo, seed=0)
+    s2 = _packed_state(lo, seed=7)
+    mgr.save(1, s1, meta={"format": dict(fmt)}, block=True)
+    mgr.save(2, s2, meta={"format": dict(fmt)}, block=True)
+
+    d2 = tmp_path / "step_0000000002"
+    shard = d2 / "arrays_host1.npz"
+    if corrupt == "truncate":
+        shard.write_bytes(shard.read_bytes()[:shard.stat().st_size // 2])
+    elif corrupt == "flip":
+        data = bytearray(shard.read_bytes())
+        data[len(data) // 2] ^= 0xFF
+        shard.write_bytes(bytes(data))
+    else:
+        (d2 / "manifest.json").unlink()
+
+    zb = jnp.zeros((lo.num_buckets, lo.bucket_elems))
+    tmpl = _mk_state(params, adam.AdamState(step=jnp.int32(0), m=zb,
+                                            v=zb),
+                     err=np.zeros((2, lo.num_buckets, lo.bucket_elems),
+                                  np.float32))
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(tmpl, step=2)
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.checkpoint"):
+        got, meta = mgr.restore(tmpl)
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(got.opt.m),
+                                  np.asarray(s1.opt.m))
+    assert any("falling back" in r.message for r in caplog.records)
+
+
+def test_restore_rejects_lossy_dtype_cast_unless_allowed(tmp_path,
+                                                         caplog):
+    """`_unflatten_like` no longer astype()s silently: fp32 ckpt into a
+    bf16 template raises unless allow_cast=True, and ANY cast logs."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.arange(4.0, dtype=jnp.float32)}, block=True)
+    narrow = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    with pytest.raises(ValueError, match="lossy dtype cast"):
+        mgr.restore(narrow)
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.checkpoint"):
+        got, _ = mgr.restore(narrow, allow_cast=True)
+    assert np.asarray(got["w"]).dtype == jnp.bfloat16
+    assert any("cast" in r.message for r in caplog.records)
+    # widening is lossless: allowed without the flag, still logged
+    caplog.clear()
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.checkpoint"):
+        wide, _ = mgr.restore({"w": jax.ShapeDtypeStruct((4,),
+                                                         np.float64)})
+    assert np.asarray(wide["w"]).dtype == np.float64
+    assert any("cast" in r.message for r in caplog.records)
+    # same dtype: no cast, no log
+    caplog.clear()
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.checkpoint"):
+        mgr.restore({"w": jax.ShapeDtypeStruct((4,), np.float32)})
+    assert not caplog.records
+
+
+def test_all_steps_skips_stray_entries_with_one_warning(tmp_path,
+                                                        caplog):
+    """Stray step_* entries (editor leftovers) are skipped with a
+    warning instead of crashing int() — and warned only once."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.ones(2)}, block=True)
+    os.makedirs(str(tmp_path / "step_00000000xx"))
+    (tmp_path / "step_editor.swp").write_text("junk")
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.checkpoint"):
+        assert mgr.all_steps() == [1]
+    assert sum("non-checkpoint" in r.message
+               for r in caplog.records) == 2
+    caplog.clear()
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.checkpoint"):
+        assert mgr.all_steps() == [1]
+    assert not caplog.records
+
+
+def test_err_rank_change_distributes_sum_across_new_ranks(tmp_path):
+    """Re-mesh residual bugfix: the summed residual is partitioned over
+    the NEW ranks' contiguous stream extents — sum conserved
+    bit-exactly, every destination rank carries a share, no rank parked
+    with the whole fleet's residual (the old rank-0 behavior)."""
+    params = _tree(0)
+    lo = bkt.build_layout(params, bucket_mb=1e-4, multiple_of=8)
+    state = _packed_state(lo, seed=3, err_ranks=4)
+    flat = np.asarray(state.err).reshape(4, -1)[:, :lo.total].copy()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state, block=True)
+
+    zb = jnp.zeros((lo.num_buckets, lo.bucket_elems))
+    tmpl = _mk_state(params, adam.AdamState(step=jnp.int32(1), m=zb,
+                                            v=zb),
+                     err=np.zeros((2, lo.num_buckets, lo.bucket_elems),
+                                  np.float32))
+    got, _ = mgr.restore(tmpl)
+    got_err = np.asarray(got.err).reshape(2, -1)
+    np.testing.assert_array_equal(got_err.sum(axis=0)[:lo.total],
+                                  flat.sum(axis=0))
+    exts = bkt.host_shard_extents(lo.padded_total, 2)
+    for r, (lo_e, hi_e) in enumerate(exts):
+        assert np.abs(got_err[r, lo_e:min(hi_e, lo.total)]).sum() > 0, \
+            f"rank {r} restarted with an empty residual share"
+        outside = np.concatenate([got_err[r, :lo_e], got_err[r, hi_e:]])
+        assert not outside.any(), \
+            f"rank {r} holds residual outside its extent"
 
 
 # --------------------------------------------------------------------------
