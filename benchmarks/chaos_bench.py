@@ -1,0 +1,366 @@
+"""Convergence-under-faults benchmark (fail-loud) -> BENCH_chaos.json.
+
+Runs a small fp32 model through scripted fault scenarios
+(core/chaos.py presets) with the REAL live-heterogeneity machinery —
+capacity plans, pack/unpack, straggler monitor with chaos-modeled
+per-rank times, soft replans, RemeshRequired escalation through
+``elastic.plan_remesh``, and v3 checkpoint save/rollback-restore (with
+injected transient ckpt IO faults exercising the writer's bounded
+retry) — and asserts two invariants, loudly:
+
+(a) **Bit-identity.** The executor computes per-row gradients (vmap)
+    and aggregates them in canonical global-row order
+    (``weighting.canonical_aggregate``), which removes the row->rank
+    assignment from the float math: fp32 addition is not associative,
+    so the SPMD step's aggregate is only tolerance-equal across plans,
+    but the canonical sum has a FIXED reduction tree. Under it, a
+    chaos-disturbed run — replans shifting rows between ranks, a dead
+    rank drained to zero rows, a pod kill escalating to re-mesh +
+    checkpoint rollback — must produce the bit-identical per-step loss
+    sequence and final params as the undisturbed run consuming the same
+    global rows. Any drift means the machinery corrupted the consumed
+    row stream (lost/duplicated/reordered rows, inexact restore).
+
+(b) **Replanning pays.** Under the sustained-slowdown preset, modeled
+    wall-clock (max over alive ranks of rows/speed * slowdown, per
+    step) with throughput-fed replanning must be STRICTLY below the
+    no-replan baseline.
+
+Plus a replayability check: the same seed + schedule produces a
+byte-identical modeled trace and a bit-identical second training run.
+
+Quick mode (benchmarks/run.py --quick) runs the three core presets at
+reduced step counts; the full tier adds the combined "storm" preset
+(slowdown + flaky reports + pod kill + ckpt IO faults).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import sys
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.abspath(__file__)), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import base as cfgbase
+from repro.configs.base import OptimizerConfig
+from repro.core import chaos, dummy, elastic, weighting
+from repro.core import capacity as cap
+from repro.core.straggler import RemeshRequired, StragglerMonitor
+from repro.data.synthetic import make_lm_records
+from repro.launch import steps as steps_mod  # noqa: F401 (parity import)
+from repro.models.model import build_model
+from repro.optim import adam
+
+GLOBAL_ROWS = 12
+SEQ_LEN = 12
+POOL_SEQS = 64
+TOPO = elastic.MeshTopology(pods=2, data_per_pod=2, model=1)
+HEADROOM = 1.5          # buffer 5/rank: 2 survivors (10) < 12 rows =>
+CKPT_EVERY = 3          # a pod kill MUST escalate to a re-mesh
+
+
+def _build():
+    cfg = dataclasses.replace(
+        cfgbase.smoke_config("tinyllama-1.1b"), compute_dtype="float32",
+        num_layers=1, d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+        vocab_size=64)
+    model = build_model(cfg)
+    params = jax.jit(model.init_params)(jax.random.PRNGKey(0))
+    ocfg = OptimizerConfig(lr=1e-2, grad_clip=0.0)
+    opt = adam.init_state(params, ocfg)
+
+    @jax.jit
+    def step_fn(params, opt, batch):
+        (o, w), grads = weighting.per_row_values(model.loss_fn, params,
+                                                 batch)
+        loss, g, _, _ = weighting.canonical_aggregate(o, w, grads)
+        new_p, new_opt, _ = adam.apply_update(params, g, opt, ocfg,
+                                              jnp.float32(ocfg.lr))
+        return new_p, new_opt, loss
+
+    pool = make_lm_records(POOL_SEQS, SEQ_LEN, cfg.vocab_size, seed=7)
+    return params, opt, step_fn, pool
+
+
+def _rows_for_step(pool: Dict[str, np.ndarray], step: int
+                   ) -> Dict[str, np.ndarray]:
+    """The global rows of one step — a pure function of the step index,
+    so every run (disturbed or not, any plan) consumes the same rows."""
+    idx = [(step * GLOBAL_ROWS + j) % POOL_SEQS
+           for j in range(GLOBAL_ROWS)]
+    return {"inputs": pool["inputs"][idx], "labels": pool["labels"][idx]}
+
+
+def _run(schedule: chaos.ChaosSchedule, steps: int, params, opt,
+         step_fn, pool, replan: bool = True, replan_interval: int = 2,
+         ckpt_dir: Optional[str] = None) -> Dict:
+    """One training run under a chaos schedule. Returns the per-step
+    loss bits, final params, modeled wall-clock and event counters."""
+    topo = TOPO
+    plan = cap.plan_capacities(GLOBAL_ROWS, [1.0] * topo.dp_size,
+                               headroom=HEADROOM)
+    engine = chaos.ChaosEngine(schedule, topo.dp_size,
+                               topo.data_per_pod)
+    monitor = StragglerMonitor(num_ranks=topo.dp_size, ema_decay=0.6,
+                               replan_interval=replan_interval,
+                               dead_timeout_steps=2)
+    mgr = (CheckpointManager(ckpt_dir, keep=2, io_retries=3,
+                             io_backoff_s=0.005,
+                             fault_hook=engine.ckpt_fault_hook())
+           if ckpt_dir else None)
+    losses: Dict[int, bytes] = {}
+    wall = 0.0
+    soft_replans = 0
+    remeshes = 0
+    first_replan_step = None
+    s = 0
+    while s < steps:
+        samples = _rows_for_step(pool, s)
+        # the REAL packing path: rows -> per-rank fixed buffers with
+        # dummy padding under the CURRENT plan, then recovered to
+        # global order for the canonical executor. A plan that loses,
+        # duplicates or reorders rows breaks bit-identity right here.
+        packed = dummy.pack_global_batch(samples, plan)
+        rec = dummy.unpack_real_rows(packed, plan)
+        batch = {k: jnp.asarray(v) for k, v in rec.items()}
+        params, opt, loss = step_fn(params, opt, batch)
+        losses[s] = np.float32(loss).tobytes()
+        wall += engine.modeled_step_wall(s, plan.rows_per_rank)
+        done = s + 1
+        if mgr is not None and done % CKPT_EVERY == 0:
+            mgr.save(done, {"params": params,
+                            "opt": {"step": opt.step, "m": opt.m,
+                                    "v": opt.v}},
+                     meta={"plan": plan})
+        monitor.observe(engine.step_times(s, plan.rows_per_rank, 1.0))
+        if replan and monitor.should_replan():
+            try:
+                new_plan = monitor.replan(plan)
+                if new_plan.rows_per_rank.tolist() != \
+                        plan.rows_per_rank.tolist():
+                    soft_replans += 1
+                    if first_replan_step is None:
+                        first_replan_step = s
+                plan = new_plan
+            except RemeshRequired:
+                if mgr is None:
+                    raise SystemExit(
+                        "[chaos_bench] RemeshRequired without a "
+                        "checkpoint dir — preset/topology mismatch")
+                mgr.wait()
+                dead = set(monitor.dead_ranks().tolist())
+                dpp = topo.data_per_pod
+                alive = [p for p in range(topo.pods)
+                         if not all(r in dead
+                                    for r in range(p * dpp,
+                                                   (p + 1) * dpp))]
+                decision = elastic.plan_remesh(topo, alive, GLOBAL_ROWS)
+                if not decision.restart_required:
+                    raise SystemExit(
+                        "[chaos_bench] dead ranks without a whole pod "
+                        "lost cannot be absorbed — bad preset")
+                if not elastic.validate_resume_equivalence(
+                        plan, decision.plan):
+                    raise SystemExit(
+                        "[chaos_bench] remesh plan consumes a "
+                        "different global record stream")
+                template = jax.tree.map(
+                    np.asarray,
+                    {"params": params, "opt": {"step": opt.step,
+                                               "m": opt.m, "v": opt.v}})
+                host, meta = mgr.restore(template)
+                params = jax.tree.map(jnp.asarray, host["params"])
+                opt = adam.AdamState(
+                    step=jnp.asarray(host["opt"]["step"]),
+                    m=jax.tree.map(jnp.asarray, host["opt"]["m"]),
+                    v=jax.tree.map(jnp.asarray, host["opt"]["v"]))
+                s = int(meta["step"])      # rollback: replay from ckpt
+                topo = decision.topology
+                plan = decision.plan
+                engine = engine.after_remesh(alive)
+                monitor = StragglerMonitor(
+                    num_ranks=topo.dp_size, ema_decay=0.6,
+                    replan_interval=replan_interval,
+                    dead_timeout_steps=2)
+                remeshes += 1
+                continue
+        s += 1
+    if mgr is not None:
+        mgr.wait()
+    return {"losses": losses, "params": params, "wall": wall,
+            "soft_replans": soft_replans, "remeshes": remeshes,
+            "first_replan_step": first_replan_step,
+            "final_ranks": plan.num_ranks,
+            "final_rows": plan.rows_per_rank.tolist()}
+
+
+def _bit_identical(ref: Dict, run: Dict) -> Tuple[bool, str]:
+    if set(ref["losses"]) != set(run["losses"]):
+        return False, "step coverage differs"
+    for s in ref["losses"]:
+        if ref["losses"][s] != run["losses"][s]:
+            return False, f"loss bits differ at step {s}"
+    ra = jax.tree.leaves(ref["params"])
+    rb = jax.tree.leaves(run["params"])
+    for a, b in zip(ra, rb):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype != b.dtype or not np.array_equal(
+                a.view(np.uint8), b.view(np.uint8)):
+            return False, "final params differ bitwise"
+    return True, "bit-identical"
+
+
+def main(quick: bool = False, out: str = "BENCH_chaos.json",
+         seed: int = 0) -> Dict:
+    params0, opt0, step_fn, pool = _build()
+    n, dpp = TOPO.dp_size, TOPO.data_per_pod
+    steps = {"slowdown": 10 if quick else 16,
+             "dead-rank": 10 if quick else 16,
+             "pod-kill": 14 if quick else 20,
+             "storm": 18}
+    presets = ["slowdown", "dead-rank", "pod-kill"]
+    if not quick:
+        presets.append("storm")
+
+    results: Dict[str, Dict] = {}
+    failures: List[str] = []
+    tmp = tempfile.mkdtemp(prefix="chaos_bench_")
+    try:
+        for name in presets:
+            t = steps[name]
+            schedule = chaos.ChaosSchedule(
+                events=chaos.PRESETS[name](n, dpp, t), seed=seed)
+            needs_ckpt = any(ev.kind == "kill" and ev.pod is not None
+                             for ev in schedule.events)
+            if needs_ckpt and not any(ev.kind == "ckpt_io_fail"
+                                      for ev in schedule.events):
+                # exercise the writer's bounded retry on every preset
+                # that checkpoints: each save fails once, then lands
+                schedule = schedule.with_events(
+                    chaos.ckpt_io_fail(step=None, fails=1))
+            interval = 6 if name == "dead-rank" else 2
+            ckpt_dir = (os.path.join(tmp, name.replace("-", "_"))
+                        if needs_ckpt else None)
+            ref = _run(chaos.ChaosSchedule(seed=seed), t, params0, opt0,
+                       step_fn, pool, replan=False)
+            run = _run(schedule, t, params0, opt0, step_fn, pool,
+                       replan=True, replan_interval=interval,
+                       ckpt_dir=ckpt_dir)
+            ok, why = _bit_identical(ref, run)
+            results[name] = {
+                "steps": t, "bit_identical": ok, "detail": why,
+                "soft_replans": run["soft_replans"],
+                "remeshes": run["remeshes"],
+                "first_replan_step": run["first_replan_step"],
+                "final_ranks": run["final_ranks"],
+                "final_rows": run["final_rows"],
+                "modeled_wall": run["wall"],
+                "modeled_wall_undisturbed": ref["wall"],
+            }
+            if not ok:
+                failures.append(f"{name}: NOT bit-identical ({why})")
+            print(f"[chaos_bench] {name}: bit_identical={ok} "
+                  f"soft_replans={run['soft_replans']} "
+                  f"remeshes={run['remeshes']} "
+                  f"final_rows={run['final_rows']} "
+                  f"wall={run['wall']:.1f} (undisturbed {ref['wall']:.1f})")
+
+        # structural expectations per preset — a preset that silently
+        # stops exercising its path is a dead test
+        if results["dead-rank"]["soft_replans"] < 1 or \
+                0 not in results["dead-rank"]["final_rows"]:
+            failures.append("dead-rank: the dead rank was never "
+                            "drained by a soft replan")
+        # immediate replan (not the interval-6 boundary): the kill
+        # lands at steps//3, timeout 2 => drain 2 steps later
+        kill_at = steps["dead-rank"] // 3
+        if results["dead-rank"]["first_replan_step"] != kill_at + 1:
+            failures.append(
+                f"dead-rank: replan at step "
+                f"{results['dead-rank']['first_replan_step']}, expected "
+                f"immediately on dead detection at {kill_at + 1}")
+        if results["pod-kill"]["remeshes"] != 1 or \
+                results["pod-kill"]["final_ranks"] != n // 2:
+            failures.append("pod-kill: expected exactly one re-mesh to "
+                            "half the DP width")
+
+        # (b) modeled wall-clock: replanning strictly beats no-replan
+        # under sustained slowdown
+        t = steps["slowdown"]
+        schedule = chaos.ChaosSchedule(
+            events=chaos.PRESETS["slowdown"](n, dpp, t), seed=seed)
+        with_replan = _run(schedule, t, params0, opt0, step_fn, pool,
+                           replan=True, replan_interval=2)
+        no_replan = _run(schedule, t, params0, opt0, step_fn, pool,
+                         replan=False)
+        wall_ok = with_replan["wall"] < no_replan["wall"]
+        results["slowdown_wall"] = {
+            "replan": with_replan["wall"],
+            "no_replan": no_replan["wall"],
+            "speedup": no_replan["wall"] / max(with_replan["wall"],
+                                               1e-9),
+            "strictly_better": wall_ok,
+        }
+        print(f"[chaos_bench] slowdown wall: replan "
+              f"{with_replan['wall']:.1f} vs no-replan "
+              f"{no_replan['wall']:.1f} "
+              f"({results['slowdown_wall']['speedup']:.2f}x)")
+        if not wall_ok:
+            failures.append("slowdown: replanned modeled wall-clock is "
+                            "not strictly below the no-replan baseline")
+
+        # replayability: byte-identical modeled trace AND bit-identical
+        # second training run from the same seed + schedule
+        eng_a = chaos.ChaosEngine(schedule, n, dpp)
+        eng_b = chaos.ChaosEngine(schedule, n, dpp)
+        trace_ok = (json.dumps(eng_a.trace(t, [3] * n))
+                    == json.dumps(eng_b.trace(t, [3] * n)))
+        rerun = _run(schedule, t, params0, opt0, step_fn, pool,
+                     replan=True, replan_interval=2)
+        rerun_ok, rerun_why = _bit_identical(with_replan, rerun)
+        results["replayable"] = {"trace": trace_ok,
+                                 "training_run": rerun_ok}
+        if not trace_ok:
+            failures.append("chaos trace is not replayable from seed")
+        if not rerun_ok:
+            failures.append(f"repeated chaos run diverged "
+                            f"({rerun_why})")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    record = {"quick": quick, "seed": seed,
+              "global_rows": GLOBAL_ROWS,
+              "topology": {"pods": TOPO.pods,
+                           "data_per_pod": TOPO.data_per_pod},
+              "presets": {k: v for k, v in results.items()
+                          if k in steps},
+              "slowdown_wall": results["slowdown_wall"],
+              "replayable": results["replayable"]}
+    with open(out, "w") as fh:
+        # np.float64 walls / np.bool comparisons -> plain JSON scalars
+        json.dump(record, fh, indent=1,
+                  default=lambda o: o.item()
+                  if isinstance(o, np.generic) else str(o))
+    print(f"[chaos_bench] wrote {out}")
+    if failures:
+        for f in failures:
+            print(f"[chaos_bench] INVARIANT BROKEN: {f}")
+        raise SystemExit("[chaos_bench] fail-loud: "
+                         + "; ".join(failures))
+    return record
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

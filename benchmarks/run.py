@@ -23,13 +23,22 @@ DOC = """Benchmark suite — one entry per paper table/figure + roofline.
                        not strictly below the serial modeled time, or
                        the fused pipeline diverges from the monolithic
                        update)
+  chaos_bench          convergence under scripted faults (core/chaos.py
+                       presets: sustained slowdown, dead rank, pod kill
+                       + re-mesh, full storm): fails loudly if a
+                       chaos-disturbed run is not bit-identical (fp32,
+                       canonical-order aggregation) to the undisturbed
+                       run over the same global rows, if throughput-fed
+                       replanning does not strictly beat no-replan on
+                       modeled wall-clock under sustained slowdown, or
+                       if the seeded trace/run is not replayable
   durability_smoke     (--quick only) checkpoint manifest path: save ->
                        corrupt a shard / delete the manifest ->
                        checksum-validated fallback restore to the
                        previous committed step
 
---quick: the CI smoke tier — runs the fail-loud reduce/overlap bench
-smokes plus the repo's quick test tier (``pytest -m "not slow"``: the
+--quick: the CI smoke tier — runs the fail-loud reduce/overlap/chaos
+bench smokes plus the repo's quick test tier (``pytest -m "not slow"``: the
 multi-device subprocess suites, hypothesis sweeps and driver
 integration tests carry a ``slow`` marker and stay in the full tier-1
 run), skipping the scaling sweeps.
@@ -71,9 +80,9 @@ def main() -> None:
     t_all = time.time()
     csv = []
 
-    from benchmarks import (equivalence, overlap_bench, reduce_bench,
-                            roofline_bench, scaling_bert, scaling_small,
-                            scaling_translation)
+    from benchmarks import (chaos_bench, equivalence, overlap_bench,
+                            reduce_bench, roofline_bench, scaling_bert,
+                            scaling_small, scaling_translation)
 
     rb = reduce_bench.main(quick=True)
     csv.append(("reduce_bench", rb["bucketed"]["avg_ms"] * 1e3,
@@ -87,6 +96,14 @@ def main() -> None:
                 f"bwd_overlap_int8="
                 f"{ob['backward_int8']['model']['model_speedup_vs_after_backward']:.2f}x "
                 f"exact_fp32={ob['fp32']['exact_match']}"))
+
+    cb = chaos_bench.main(quick=args.quick)
+    n_bit = sum(1 for p in cb["presets"].values()
+                if p["bit_identical"])
+    csv.append(("chaos_bench", 0.0,
+                f"bit_identical_presets={n_bit}/{len(cb['presets'])} "
+                f"replan_speedup="
+                f"{cb['slowdown_wall']['speedup']:.2f}x"))
 
     if args.quick:
         from benchmarks import docs_smoke, durability_smoke

@@ -69,6 +69,7 @@ import logging
 import os
 import shutil
 import threading
+import time
 import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -313,9 +314,26 @@ def _assemble_shards(npz_arrays: Dict[str, Dict[str, np.ndarray]],
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 io_retries: int = 3, io_backoff_s: float = 0.05,
+                 fault_hook=None):
+        """``io_retries``: total write attempts per save for transient
+        ``OSError`` (disk-full blips, NFS hiccups) — the background
+        writer retries with exponential backoff (``io_backoff_s``,
+        doubling) and re-raises through ``wait()`` after the last
+        attempt. Each attempt rebuilds the ``.tmp`` dir from scratch,
+        so the fsync + atomic-rename commit semantics are unchanged: a
+        step is either fully committed or absent.
+
+        ``fault_hook``: optional ``hook(step, tmp_path)`` called at the
+        start of every write attempt — the chaos engine's
+        ``ckpt_io_fail`` fault (core/chaos.py) raises ``OSError`` here
+        to exercise the retry path deterministically."""
         self.directory = directory
         self.keep = keep
+        self.io_retries = max(int(io_retries), 1)
+        self.io_backoff_s = float(io_backoff_s)
+        self.fault_hook = fault_hook
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: List[BaseException] = []
@@ -349,11 +367,25 @@ class CheckpointManager:
         num_hosts = max(int(fmt.get("hosts") or 1), 1)
 
         def write():
-            try:
-                self._write(step, flat, meta, version, num_hosts)
-                self._rotate()
-            except BaseException as e:     # surfaced on next wait()
-                self._error.append(e)
+            delay = self.io_backoff_s
+            for attempt in range(1, self.io_retries + 1):
+                try:
+                    self._write(step, flat, meta, version, num_hosts)
+                    self._rotate()
+                    return
+                except OSError as e:      # transient IO: bounded retry
+                    if attempt >= self.io_retries:
+                        self._error.append(e)
+                        return
+                    logger.warning(
+                        "checkpoint write for step %d failed (%s) — "
+                        "attempt %d/%d, retrying in %.0f ms", step, e,
+                        attempt, self.io_retries, delay * 1e3)
+                    time.sleep(delay)
+                    delay *= 2.0
+                except BaseException as e:  # surfaced on next wait()
+                    self._error.append(e)
+                    return
 
         self._thread = threading.Thread(target=write, daemon=True,
                                         name=f"ckpt-write-{step}")
@@ -368,6 +400,8 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
+        if self.fault_hook is not None:
+            self.fault_hook(step, tmp)
         if version == 2:
             path = os.path.join(tmp, "arrays.npz")
             np.savez(path, **flat)

@@ -38,6 +38,7 @@ class StragglerMonitor:
     _ema: Optional[np.ndarray] = None
     _missed: Optional[np.ndarray] = None
     _steps: int = 0
+    _dead_handled: frozenset = frozenset()
 
     def __post_init__(self):
         self._ema = np.zeros(self.num_ranks, np.float64)
@@ -49,6 +50,11 @@ class StragglerMonitor:
 
     def observe(self, step_times: Sequence[Optional[float]]) -> None:
         """Record one step's per-rank times; None = no report (missed)."""
+        if len(step_times) != self.num_ranks:
+            raise ValueError(
+                f"observe() got {len(step_times)} step times for "
+                f"{self.num_ranks} ranks — after an elastic re-mesh the "
+                f"monitor must be recreated for the new mesh width")
         self._steps += 1
         for r, t in enumerate(step_times):
             if t is None:
@@ -65,6 +71,11 @@ class StragglerMonitor:
         return np.flatnonzero(self._missed >= self.dead_timeout_steps)
 
     def should_replan(self) -> bool:
+        """Window boundary — or IMMEDIATELY on a newly-dead rank: a rank
+        dying at step ``k*interval + 1`` must not drag all-dummy steps
+        for the rest of the window."""
+        if set(self.dead_ranks().tolist()) - self._dead_handled:
+            return True
         return self._steps > 0 and self._steps % self.replan_interval == 0
 
     def replan(self, plan: CapacityPlan) -> CapacityPlan:
@@ -74,6 +85,7 @@ class StragglerMonitor:
         fits the surviving fixed-size buffers — the caller must escalate
         to elastic.plan_remesh (checkpoint restart with a new mesh).
         """
+        self._dead_handled = frozenset(self.dead_ranks().tolist())
         rows = np.maximum(plan.rows_per_rank.astype(np.float64), 1.0)
         ema = np.where(self._ema > 0, self._ema, np.inf)
         throughput = np.where(np.isfinite(ema), rows / ema, 0.0)

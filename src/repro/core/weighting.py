@@ -59,6 +59,50 @@ def weighted_grad_psum(grads: Any, weight: jnp.ndarray, axis) -> Any:
     return jax.tree.map(lambda g: jax.lax.psum(g, axis) * inv, grads)
 
 
+def per_row_values(loss_fn, params, batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray], Any]:
+    """Per-row objective/weight sums and gradients, vmapped.
+
+    ``batch`` arrays carry a leading row dim; each row is evaluated as
+    its own single-row batch, so row *i*'s outputs depend only on
+    (params, row *i*) — never on which rank/buffer slot held it.
+    Returns ``((o, w), grads)`` where every array gains that leading
+    row dim. Building block of the *order-canonical* aggregation below.
+    """
+    def obj(p, row):
+        b = jax.tree.map(lambda v: v[None], row)
+        o, w, _ = loss_fn(p, b)
+        return o, w
+
+    gfn = jax.value_and_grad(obj, has_aux=True)
+    return jax.vmap(gfn, in_axes=(None, 0))(params, batch)
+
+
+def canonical_aggregate(per_row_obj: jnp.ndarray,
+                        per_row_w: jnp.ndarray,
+                        per_row_grads: Any
+                        ) -> Tuple[jnp.ndarray, Any,
+                                   jnp.ndarray, jnp.ndarray]:
+    """Order-canonical HetSeq aggregation: sum per-row values along the
+    leading (global-row-ordered) axis with a FIXED reduction tree.
+
+    fp32 addition is not associative, so the SPMD step's aggregate is
+    only tolerance-equal across different row->rank assignments (the
+    partition changes the summation grouping). Summing *per-row* values
+    in global-row order removes the plan from the float math entirely:
+    any two runs that consume the same global rows produce bit-identical
+    loss and gradients, whatever replans/re-meshes happened in between.
+    The chaos benchmark (benchmarks/chaos_bench.py) builds its
+    bitwise-checkable invariant on this.
+
+    Returns ``(loss, scaled_grads, o_sum, w_sum)``.
+    """
+    o_sum = jnp.sum(per_row_obj, axis=0)
+    w_sum = jnp.sum(per_row_w, axis=0)
+    grads = jax.tree.map(lambda a: jnp.sum(a, axis=0), per_row_grads)
+    return finalize(o_sum, w_sum), scale_grads(grads, w_sum), o_sum, w_sum
+
+
 def simulate_workers(loss_fn, params, worker_batches: Sequence[Dict]
                      ) -> Tuple[jnp.ndarray, Any]:
     """Reference het-DP executor (no mesh): runs each worker's batch

@@ -17,8 +17,15 @@ stream before training continues at the saved data-stream position.
 
 Runs on anything: real TPU pods (production mesh) or this CPU container
 (--devices data,model uses host devices; --smoke uses reduced configs).
-``--kill-pod P@S`` injects a pod failure at step S to exercise the full
-detect -> replan -> remesh -> repacked-resume path end to end.
+Fault injection goes through the deterministic chaos engine
+(core/chaos.py): ``--chaos <schedule.json|preset>`` scripts slowdowns,
+rank/pod kills, flaky reports and checkpoint-IO failures, whose modeled
+per-rank step times feed the straggler monitor (replacing the
+undifferentiated host clock of single-process emulation) — slow ranks
+shed rows via soft replans, dead ranks escalate to the elastic re-mesh.
+``--kill-pod P@S`` is kept as a back-compat alias for a one-entry kill
+schedule and exercises the full detect -> replan -> remesh ->
+repacked-resume path end to end.
 
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
@@ -44,7 +51,7 @@ from repro.configs import base as cfgbase
 from repro.configs.base import (HetConfig, OptimizerConfig, ShapeConfig,
                                 TrainConfig)
 from repro.core import capacity as cap
-from repro.core import elastic
+from repro.core import chaos, elastic
 from repro.core.straggler import RemeshRequired, StragglerMonitor
 from repro.data.dataset import ShardedDataset
 from repro.data.loader import PrefetchLoader
@@ -126,11 +133,38 @@ def mesh_for_topology(topo: elastic.MeshTopology):
 
 
 def _parse_kill(spec: str) -> Optional[Tuple[int, int]]:
-    """'P@S' -> (pod P, from global step S). Fault-injection harness."""
+    """'P@S' -> (pod P, from global step S). Back-compat alias: becomes
+    a one-entry ``chaos.kill(pod=P, step=S)`` schedule."""
     if not spec:
         return None
     pod, at = spec.split("@")
     return int(pod), int(at)
+
+
+def build_chaos_engine(args, tcfg: TrainConfig, mesh,
+                       topo: elastic.MeshTopology) -> chaos.ChaosEngine:
+    """Resolve --chaos (+ the --kill-pod alias) into one engine — the
+    single fault-injection path for the driver."""
+    n_dp = dp_size(mesh)
+    schedule = chaos.ChaosSchedule(seed=tcfg.seed)
+    if args.chaos:
+        try:
+            schedule = chaos.load_schedule(
+                args.chaos, num_ranks=n_dp,
+                data_per_pod=topo.data_per_pod,
+                total_steps=args.steps, seed=tcfg.seed)
+        except (ValueError, OSError) as e:
+            raise SystemExit(f"[train] --chaos: {e}") from e
+    kill = _parse_kill(args.kill_pod)
+    if kill is not None:
+        schedule = schedule.with_events(
+            chaos.kill(pod=kill[0], step=kill[1]))
+    try:
+        return chaos.ChaosEngine(
+            schedule, num_ranks=n_dp, data_per_pod=topo.data_per_pod,
+            speeds=tcfg.het.capacities or None)
+    except ValueError as e:
+        raise SystemExit(f"[train] {e}") from e
 
 
 def train(args) -> Dict[str, float]:
@@ -141,6 +175,14 @@ def train(args) -> Dict[str, float]:
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}, plan rows "
           f"{plan.rows_per_rank.tolist()} buffer {plan.buffer_rows} "
           f"(efficiency {plan.efficiency():.2f})")
+    # resolve fault injection before --dry-run exits so a documented
+    # --chaos preset / schedule (and --kill-pod target) is validated by
+    # the README docs smoke
+    engine = build_chaos_engine(args, tcfg, mesh, topo)
+    if engine.schedule.events:
+        kinds = sorted({ev.kind for ev in engine.schedule.events})
+        print(f"[train] chaos: {len(engine.schedule.events)} event(s) "
+              f"{kinds} (seed {engine.schedule.seed})")
     if args.dry_run:
         # validate the full config stack (the same checks
         # build_train_step runs) and stop before any compilation or
@@ -163,11 +205,8 @@ def train(args) -> Dict[str, float]:
         seq_len=args.seq_len + 1, vocab=cfg.vocab_size,
         rows_per_shard=64, seed=tcfg.seed)
     ds = ShardedDataset(corpus)
-    mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
-    kill = _parse_kill(args.kill_pod)
-    if kill is not None and not 0 <= kill[0] < topo.pods:
-        raise SystemExit(f"--kill-pod {kill[0]} out of range: mesh has "
-                         f"{topo.pods} pod(s)")
+    mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep,
+                            fault_hook=engine.ckpt_fault_hook())
 
     def build_runtime(mesh, plan):
         """Everything that depends on the mesh / plan (rebuilt on
@@ -265,17 +304,22 @@ def train(args) -> Dict[str, float]:
                             step += 1
                             batch_in_epoch = consumed
                             # per-rank step times: on real fleets each
-                            # host reports; here every rank shares the
-                            # host clock. --kill-pod stops the victim's
-                            # reports.
-                            times = [dt] * n_dp
-                            if kill is not None and step >= kill[1]:
-                                for r in range(n_dp):
-                                    if r // topo.data_per_pod == kill[0]:
-                                        times[r] = None
-                            monitor.observe(times)
+                            # host reports; here the chaos engine
+                            # differentiates ranks from the host clock
+                            # (slowdowns inflate, kills/flaky drop the
+                            # report). No schedule => every rank reports
+                            # the measured time.
+                            monitor.observe(engine.step_times(
+                                step, plan.rows_per_rank, dt))
                             if monitor.should_replan():
-                                plan = monitor.replan(plan)
+                                new_plan = monitor.replan(plan)
+                                if new_plan.rows_per_rank.tolist() != \
+                                        plan.rows_per_rank.tolist():
+                                    print(f"[train] replan: rows "
+                                          f"{plan.rows_per_rank.tolist()}"
+                                          f" -> "
+                                          f"{new_plan.rows_per_rank.tolist()}")
+                                plan = new_plan
                                 sampler.set_plan(plan)
                             if step % args.log_every == 0:
                                 print(f"[train] step {step:5d} loss "
@@ -357,7 +401,10 @@ def train(args) -> Dict[str, float]:
                 monitor = StragglerMonitor(
                     num_ranks=n_dp, ema_decay=tcfg.het.straggler_ema,
                     replan_interval=tcfg.het.replan_interval)
-                kill = None                # the dead pod is gone
+                # remap surviving ranks; faults on the dead pod vanish
+                # with it (mgr keeps its original ckpt fault hook so
+                # transient-attempt counters survive the re-mesh)
+                engine = engine.after_remesh(alive)
                 print(f"[train] re-meshed to "
                       f"{dict(zip(mesh.axis_names, mesh.devices.shape))}"
                       f", resumed step {step} (epoch {epoch}, batch "
@@ -446,10 +493,18 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/hetseq_ckpt")
     ap.add_argument("--data-dir", default="/tmp/hetseq_data")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--chaos", default="",
+                    help="fault injection: a schedule.json path or a "
+                         "preset name "
+                         f"({', '.join(sorted(chaos.PRESETS))}) — "
+                         "deterministic per-rank slowdowns, rank/pod "
+                         "kills, flaky reports, checkpoint-IO faults "
+                         "(core/chaos.py)")
     ap.add_argument("--kill-pod", default="",
                     help="fault injection 'P@S': pod P stops reporting "
                          "from global step S (exercises the elastic "
-                         "remesh restart)")
+                         "remesh restart); alias for a one-entry "
+                         "--chaos kill schedule")
     args = ap.parse_args()
     train(args)
 

@@ -1,0 +1,287 @@
+"""core/chaos.py — deterministic fault injection.
+
+Covers the schedule format (JSON round-trip, validation, presets), the
+engine's per-(step, rank) semantics (slowdown windows, kill scope,
+seeded flaky drops), the two integration surfaces (step_times ->
+StragglerMonitor, ckpt_fault_hook -> CheckpointManager bounded retry),
+and the after_remesh renumbering. Everything here must be replayable:
+the same (schedule, seed, topology) always produces the same trace.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import capacity, chaos, straggler
+
+
+def _engine(events, num_ranks=4, data_per_pod=2, seed=0, speeds=None):
+    return chaos.ChaosEngine(
+        chaos.ChaosSchedule(events=tuple(events), seed=seed),
+        num_ranks=num_ranks, data_per_pod=data_per_pod, speeds=speeds)
+
+
+# --------------------------------------------------------------------------
+# schedule: validation + JSON round-trip
+# --------------------------------------------------------------------------
+
+
+def test_fault_validation_errors():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        chaos.Fault("meteor").validate()
+    with pytest.raises(ValueError, match="factor > 0"):
+        chaos.slowdown(rank=0, factor=0.0).validate()
+    with pytest.raises(ValueError, match="exactly one of"):
+        chaos.Fault("kill", rank=1, pod=0, step=3).validate()
+    with pytest.raises(ValueError, match="exactly one of"):
+        chaos.Fault("kill", step=3).validate()
+    with pytest.raises(ValueError, match="needs step"):
+        chaos.Fault("kill", rank=1, step=None).validate()
+    with pytest.raises(ValueError, match="drop_prob"):
+        chaos.flaky(rank=0, drop_prob=1.5).validate()
+    with pytest.raises(ValueError, match="mode"):
+        chaos.ckpt_io_fail(mode="intermittent").validate()
+    with pytest.raises(ValueError, match="fails >= 1"):
+        chaos.ckpt_io_fail(fails=0).validate()
+
+
+def test_schedule_json_round_trip():
+    sched = chaos.ChaosSchedule(events=(
+        chaos.slowdown(1, factor=3.0, start=5, duration=20),
+        chaos.kill(pod=1, step=40),
+        chaos.flaky(0, drop_prob=0.25, start=0, duration=10),
+        chaos.ckpt_io_fail(step=12, mode="persistent", fails=1),
+    ), seed=7)
+    again = chaos.ChaosSchedule.from_json(sched.to_json())
+    assert again == sched
+    # and the record is plain JSON (no numpy types, no None noise)
+    rec = json.loads(sched.to_json())
+    assert rec["seed"] == 7
+    assert all("rank" not in e or isinstance(e["rank"], int)
+               for e in rec["events"])
+
+
+def test_schedule_rejects_unknown_fields_and_kinds():
+    with pytest.raises(ValueError, match="unknown fault field"):
+        chaos.ChaosSchedule.from_record(
+            {"events": [{"kind": "kill", "rank": 0, "step": 1,
+                         "sevrity": 9}]})
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        chaos.ChaosSchedule.from_record(
+            {"events": [{"kind": "gamma_ray", "rank": 0}]})
+
+
+def test_load_schedule_preset_path_and_unknown(tmp_path):
+    sched = chaos.load_schedule("dead-rank", num_ranks=4,
+                                data_per_pod=2, total_steps=30)
+    assert [e.kind for e in sched.events] == ["kill"]
+    assert sched.events[0].rank == 3 and sched.events[0].step == 10
+
+    p = tmp_path / "sched.json"
+    p.write_text(chaos.ChaosSchedule(
+        events=(chaos.slowdown(0, 2.0),), seed=3).to_json())
+    loaded = chaos.load_schedule(str(p), num_ranks=2)
+    assert loaded.seed == 3 and loaded.events[0].kind == "slowdown"
+
+    with pytest.raises(ValueError, match="neither a schedule.json"):
+        chaos.load_schedule("black-swan", num_ranks=2)
+
+
+def test_presets_build_valid_engines_on_any_topology():
+    for name, build in chaos.PRESETS.items():
+        for n, dpp in ((1, 1), (4, 2), (6, 3)):
+            sched = chaos.ChaosSchedule(events=build(n, dpp, 20))
+            sched.validate()
+            chaos.ChaosEngine(sched, num_ranks=n, data_per_pod=dpp)
+
+
+# --------------------------------------------------------------------------
+# engine: per-(step, rank) semantics
+# --------------------------------------------------------------------------
+
+
+def test_engine_rejects_out_of_range_targets():
+    with pytest.raises(ValueError, match="rank 7 out of range"):
+        _engine([chaos.slowdown(7, 2.0)])
+    with pytest.raises(ValueError, match="pod 2 out of range"):
+        _engine([chaos.kill(pod=2, step=1)])
+
+
+def test_slowdown_window_and_stacking():
+    eng = _engine([chaos.slowdown(1, 3.0, start=5, duration=10),
+                   chaos.slowdown(1, 2.0, start=8)])
+    assert eng.slowdown_factor(4, 1) == 1.0
+    assert eng.slowdown_factor(5, 1) == 3.0
+    assert eng.slowdown_factor(9, 1) == 6.0          # overlapping: product
+    assert eng.slowdown_factor(15, 1) == 2.0         # first window closed
+    assert eng.slowdown_factor(9, 0) == 1.0          # other ranks untouched
+
+
+def test_kill_scope_rank_vs_pod():
+    eng = _engine([chaos.kill(rank=0, step=3), chaos.kill(pod=1, step=5)])
+    assert not eng.killed(2, 0) and eng.killed(3, 0)
+    # pod 1 = ranks 2,3 (data_per_pod=2); dead from step 5, forever
+    for r in (2, 3):
+        assert not eng.killed(4, r)
+        assert eng.killed(5, r) and eng.killed(100, r)
+    assert not eng.killed(100, 1)
+
+
+def test_flaky_drops_are_seed_deterministic():
+    ev = [chaos.flaky(2, drop_prob=0.5, start=0, duration=200)]
+    a = [_engine(ev, seed=11).dropped(s, 2) for s in range(200)]
+    b = [_engine(ev, seed=11).dropped(s, 2) for s in range(200)]
+    c = [_engine(ev, seed=12).dropped(s, 2) for s in range(200)]
+    assert a == b                         # pure in (seed, step, rank)
+    assert a != c                         # the seed actually matters
+    assert 0 < sum(a) < 200               # drop_prob=0.5 drops *some*
+    assert not any(_engine(ev, seed=11).dropped(s, 0) for s in range(200))
+
+
+def test_step_times_fixed_point_and_slowdown():
+    # rows proportional to speed => every alive rank reports the same
+    # modeled time (the replan fixed point: the feed converges)
+    eng = _engine([], speeds=[2.0, 1.0, 1.0, 2.0])
+    times = eng.step_times(0, [4, 2, 2, 4], measured=0.5)
+    np.testing.assert_allclose(times, [0.5] * 4)
+    # a 4x slowdown shows up as exactly 4x that rank's time
+    eng2 = _engine([chaos.slowdown(1, 4.0)], speeds=[2.0, 1.0, 1.0, 2.0])
+    t2 = eng2.step_times(0, [4, 2, 2, 4], measured=0.5)
+    np.testing.assert_allclose(t2, [0.5, 2.0, 0.5, 0.5])
+
+
+def test_step_times_none_for_killed_and_dropped():
+    eng = _engine([chaos.kill(rank=3, step=2),
+                   chaos.flaky(0, drop_prob=1.0, start=4, duration=1)])
+    t = eng.step_times(2, [2, 2, 2, 2], measured=1.0)
+    assert t[3] is None and all(x is not None for x in t[:3])
+    t4 = eng.step_times(4, [2, 2, 2, 2], measured=1.0)
+    assert t4[0] is None                  # drop window covers step 4 only
+    assert eng.step_times(5, [2, 2, 2, 2], 1.0)[0] is not None
+
+
+def test_modeled_wall_excludes_killed_and_tracks_slowdown():
+    eng = _engine([chaos.slowdown(0, 5.0, start=2),
+                   chaos.kill(rank=0, step=6)])
+    rows = [2, 2, 2, 2]
+    assert eng.modeled_step_wall(0, rows) == pytest.approx(2.0)
+    assert eng.modeled_step_wall(2, rows) == pytest.approx(10.0)
+    # once the straggler is dead it no longer gates the sync step
+    assert eng.modeled_step_wall(6, rows) == pytest.approx(2.0)
+
+
+def test_trace_replays_byte_identically():
+    ev = [chaos.slowdown(1, 3.0, start=2),
+          chaos.flaky(0, drop_prob=0.3, start=0, duration=30),
+          chaos.kill(pod=1, step=20)]
+    t1 = _engine(ev, seed=5).trace(30, [3, 3, 3, 3])
+    t2 = _engine(ev, seed=5).trace(30, [3, 3, 3, 3])
+    assert json.dumps(t1) == json.dumps(t2)
+
+
+# --------------------------------------------------------------------------
+# integration: straggler monitor feed
+# --------------------------------------------------------------------------
+
+
+def test_kill_feeds_monitor_to_immediate_replan():
+    eng = _engine([chaos.kill(rank=3, step=4)])
+    mon = straggler.StragglerMonitor(num_ranks=4, replan_interval=100,
+                                     dead_timeout_steps=2)
+    plan = capacity.homogeneous_plan(8, 4, headroom=2.0)
+    fired = None
+    for s in range(6):
+        mon.observe(eng.step_times(s, plan.rows_per_rank, 1.0))
+        if mon.should_replan():
+            fired = s
+            break
+    # dead at 4, timeout 2 => detected at step 5, NOT at the window
+    assert fired == 5
+    assert list(mon.dead_ranks()) == [3]
+    new = mon.replan(plan)
+    assert new.rows_per_rank[3] == 0
+    assert new.rows_per_rank.sum() == 8
+
+
+# --------------------------------------------------------------------------
+# integration: checkpoint fault hook + bounded retry
+# --------------------------------------------------------------------------
+
+
+def test_ckpt_fault_hook_transient_then_clears():
+    eng = _engine([chaos.ckpt_io_fail(step=3, fails=2)])
+    hook = eng.ckpt_fault_hook()
+    for _ in range(2):
+        with pytest.raises(OSError, match="ckpt_io_fail"):
+            hook(3, "/tmp/x")
+    hook(3, "/tmp/x")                     # third attempt passes
+    hook(5, "/tmp/x")                     # other steps never fault
+
+
+def test_ckpt_fault_hook_persistent_and_wildcard_step():
+    hook = _engine([chaos.ckpt_io_fail(step=None, mode="persistent")
+                    ]).ckpt_fault_hook()
+    for step in (1, 2, 9):
+        for _ in range(4):
+            with pytest.raises(OSError, match="persistent"):
+                hook(step, "/tmp/x")
+
+
+def test_checkpoint_manager_retries_transient_io_and_commits(tmp_path):
+    from repro.checkpoint.checkpoint import CheckpointManager
+
+    eng = _engine([chaos.ckpt_io_fail(step=None, fails=2)])
+    mgr = CheckpointManager(str(tmp_path), io_retries=3,
+                            io_backoff_s=0.001,
+                            fault_hook=eng.ckpt_fault_hook())
+    state = {"w": np.arange(4, dtype=np.float32)}
+    mgr.save(1, state, block=True)        # 2 injected failures, 3rd OK
+    assert mgr.all_steps() == [1]
+    restored, meta = mgr.restore(state)
+    np.testing.assert_array_equal(restored["w"], state["w"])
+    assert meta["step"] == 1
+
+
+def test_checkpoint_manager_reraises_after_retry_budget(tmp_path):
+    from repro.checkpoint.checkpoint import CheckpointManager
+
+    eng = _engine([chaos.ckpt_io_fail(step=None, mode="persistent")])
+    mgr = CheckpointManager(str(tmp_path), io_retries=3,
+                            io_backoff_s=0.001,
+                            fault_hook=eng.ckpt_fault_hook())
+    with pytest.raises(OSError, match="persistent"):
+        mgr.save(1, {"w": np.zeros(2, np.float32)}, block=True)
+    assert mgr.all_steps() == []          # nothing half-committed
+
+
+# --------------------------------------------------------------------------
+# after_remesh: surviving-topology renumbering
+# --------------------------------------------------------------------------
+
+
+def test_after_remesh_remaps_ranks_and_keeps_global_faults():
+    eng = _engine([chaos.slowdown(2, 3.0),          # pod 1 -> survives
+                   chaos.flaky(0, 0.5),             # pod 0 -> dropped
+                   chaos.kill(pod=0, step=5),       # dead pod -> dropped
+                   chaos.ckpt_io_fail(step=None)],  # global -> kept
+                  speeds=[1.0, 1.0, 2.0, 4.0])
+    new = eng.after_remesh(alive_pods=[1])
+    assert new.num_ranks == 2 and new.pods == 1
+    kinds = sorted(e.kind for e in new.schedule.events)
+    assert kinds == ["ckpt_io_fail", "slowdown"]
+    slow = [e for e in new.schedule.events if e.kind == "slowdown"][0]
+    assert slow.rank == 0                 # old rank 2 -> new rank 0
+    np.testing.assert_allclose(new.speeds, [2.0, 4.0])
+    assert new.schedule.seed == eng.schedule.seed
+
+
+def test_after_remesh_renumbers_surviving_pod_faults():
+    eng = chaos.ChaosEngine(chaos.ChaosSchedule(
+        events=(chaos.kill(pod=2, step=9),)), num_ranks=6,
+        data_per_pod=2)
+    new = eng.after_remesh(alive_pods=[0, 2])
+    (ev,) = new.schedule.events
+    assert ev.pod == 1                    # old pod 2 -> new pod 1
+    assert new.killed(9, 2) and new.killed(9, 3)
+    assert not new.killed(9, 0)

@@ -164,6 +164,29 @@ def test_invalid_mode_values_raise():
             HetConfig(**{field: bad}).validate()
 
 
+def test_readme_chaos_presets_match_registry(readme_tables):
+    """The README chaos-preset table lists EXACTLY the registered
+    presets, and each row's fault kinds match what the preset builder
+    actually schedules."""
+    from repro.core import chaos
+
+    table = _find_table(readme_tables, "preset", "faults")
+    documented = {}
+    for row in table[1:]:
+        name = row[0].strip("`")
+        documented[name] = {k.strip(" `") for k in row[1].split(",")}
+    assert set(documented) == set(chaos.PRESETS), (
+        f"README chaos table out of sync with core/chaos.py PRESETS: "
+        f"documented={sorted(documented)} "
+        f"registered={sorted(chaos.PRESETS)}")
+    for name, build in chaos.PRESETS.items():
+        actual = {ev.kind for ev in build(4, 2, 20)}
+        assert documented[name] == actual, (
+            f"preset {name!r}: README documents faults "
+            f"{sorted(documented[name])}, builder schedules "
+            f"{sorted(actual)}")
+
+
 def test_readme_quickstart_flags_exist_in_train_cli():
     """Every flag the README documents is a real train.py option (the
     full --dry-run execution runs in benchmarks/run.py --quick)."""

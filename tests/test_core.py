@@ -155,6 +155,64 @@ def test_dead_rank_detection_and_escalation():
     assert new.rows_per_rank.tolist() == [8, 0]
 
 
+def test_immediate_replan_on_newly_dead_rank():
+    """A rank dying right after a window boundary must trigger a replan
+    NOW, not ``replan_interval`` steps later — and once handled, the
+    same dead rank must not keep re-triggering every step."""
+    mon = straggler.StragglerMonitor(num_ranks=3, replan_interval=100,
+                                     dead_timeout_steps=2)
+    plan = capacity.homogeneous_plan(6, 3, headroom=2.0)
+    mon.observe([1.0, 1.0, 1.0])
+    assert not mon.should_replan()
+    mon.observe([1.0, 1.0, None])
+    assert not mon.should_replan()        # one miss is not dead yet
+    mon.observe([1.0, 1.0, None])
+    assert mon.should_replan()            # dead: immediate, mid-window
+    new = mon.replan(plan)
+    assert new.rows_per_rank[2] == 0
+    # handled: the still-dead rank must not re-fire off-window
+    mon.observe([1.0, 1.0, None])
+    assert not mon.should_replan()
+    # ... but a SECOND death re-triggers immediately
+    mon.observe([1.0, None, None])
+    mon.observe([1.0, None, None])
+    assert mon.should_replan()
+    assert sorted(mon.dead_ranks().tolist()) == [1, 2]
+
+
+def test_remesh_required_escalation_chains_planner_error():
+    """The RemeshRequired raised when survivors cannot fit the global
+    batch carries the planner's ValueError as its cause."""
+    mon = straggler.StragglerMonitor(num_ranks=2, replan_interval=1,
+                                     dead_timeout_steps=1)
+    plan = capacity.homogeneous_plan(8, 2)        # buffer 4, no headroom
+    mon.observe([1.0, None])                      # rank 1 dead instantly
+    with pytest.raises(straggler.RemeshRequired) as ei:
+        mon.replan(plan)
+    assert isinstance(ei.value.__cause__, ValueError)
+
+
+def test_monitor_recreated_after_remesh_matches_new_mesh():
+    """Regression for the re-mesh handoff: the old monitor rejects the
+    new mesh's step-time width loudly, and a monitor/plan rebuilt from
+    the RemeshDecision line up with the surviving topology."""
+    topo = elastic.MeshTopology(pods=2, data_per_pod=2, model=1)
+    d = elastic.plan_remesh(topo, alive_pods=[0], global_rows=8)
+    assert d.restart_required
+    assert len(d.plan.rows_per_rank) == d.topology.dp_size == 2
+
+    old = straggler.StragglerMonitor(num_ranks=topo.dp_size)
+    with pytest.raises(ValueError, match="re-mesh"):
+        old.observe([1.0] * d.topology.dp_size)   # stale width: loud
+
+    fresh = straggler.StragglerMonitor(num_ranks=d.topology.dp_size,
+                                       replan_interval=1)
+    fresh.observe([1.0, 2.0])
+    new = fresh.replan(d.plan)
+    assert len(new.rows_per_rank) == d.topology.dp_size
+    assert new.rows_per_rank.sum() == 8
+
+
 @given(times=st.lists(st.floats(min_value=0.1, max_value=10.0),
                       min_size=2, max_size=6))
 @settings(max_examples=50, deadline=None)
