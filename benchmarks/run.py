@@ -32,6 +32,17 @@ DOC = """Benchmark suite — one entry per paper table/figure + roofline.
                        replanning does not strictly beat no-replan on
                        modeled wall-clock under sustained slowdown, or
                        if the seeded trace/run is not replayable
+  serve_bench          continuous-batching serving engine (repro/serve:
+                       paged KV cache, capacity-aware admission): fails
+                       loudly if the engine's modeled tokens/sec is not
+                       strictly above the static-batch baseline on the
+                       same mixed-length open-loop trace, if a single
+                       sequence's generated tokens are not bit-identical
+                       to the contiguous-cache static path (fp32), or if
+                       per-pod peak concurrency under saturation is not
+                       the capacity-plan split (slower pods strictly
+                       fewer sequences); includes a 3-arrival
+                       mixed-length end-to-end smoke
   durability_smoke     (--quick only) checkpoint manifest path: save ->
                        corrupt a shard / delete the manifest ->
                        checksum-validated fallback restore to the
@@ -82,7 +93,8 @@ def main() -> None:
 
     from benchmarks import (chaos_bench, equivalence, overlap_bench,
                             reduce_bench, roofline_bench, scaling_bert,
-                            scaling_small, scaling_translation)
+                            scaling_small, scaling_translation,
+                            serve_bench)
 
     rb = reduce_bench.main(quick=True)
     csv.append(("reduce_bench", rb["bucketed"]["avg_ms"] * 1e3,
@@ -104,6 +116,14 @@ def main() -> None:
                 f"bit_identical_presets={n_bit}/{len(cb['presets'])} "
                 f"replan_speedup="
                 f"{cb['slowdown_wall']['speedup']:.2f}x"))
+
+    sv = serve_bench.main(quick=args.quick)
+    csv.append(("serve_bench", 0.0,
+                f"continuous_vs_static="
+                f"{sv['throughput']['speedup']:.2f}x "
+                f"bit_identical={sv['bit_identity']['identical']} "
+                f"pod_limits={sv['routing']['pod_limits']} "
+                f"block_util_peak={sv['block_util']['peak']:.2f}"))
 
     if args.quick:
         from benchmarks import docs_smoke, durability_smoke

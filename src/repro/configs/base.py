@@ -207,7 +207,7 @@ GRAD_REDUCTION_MODES = ("allreduce", "bucketed_allreduce", "hierarchical")
 OVERLAP_MODES = ("none", "buckets", "backward")
 COMPRESSION_MODES = ("none", "int8")
 QUANTIZE_IMPLS = ("reference", "pallas")
-WEIGHTING_MODES = ("tokens", "samples")
+WEIGHTING_MODES = ("tokens", "samples", "canonical")
 
 # Which grad_reduction modes the overlap pipelines schedule: overlap is
 # a schedule OF the explicit bucketed engine, so it needs one of these
@@ -227,7 +227,12 @@ class HetConfig:
         turns these into per-rank real-row counts, remaining buffer
         rows are weight-0 dummies (paper M1/M3).
     ``weighting``: "tokens" | "samples" — what a unit of loss weight
-        counts (paper M3 aggregation contract).
+        counts (paper M3 aggregation contract) — or "canonical": the
+        order-canonical executor (core/weighting.py) — per-row vmapped
+        gradients summed in global-row order with one fixed reduction
+        tree, so the step is bit-identical across capacity replans;
+        costs per-row grads and requires grad_reduction="allreduce",
+        overlap="none", compression="none", accum_steps=1.
     ``grad_reduction``: "allreduce" (paper-faithful, XLA-automatic) |
         "bucketed_allreduce" (explicit flat-buffer reduction over the
         DP axes; requires ``bucket_mb > 0``) | "hierarchical" (in-pod
@@ -324,6 +329,24 @@ class HetConfig:
                 raise ValueError(
                     f"HetConfig.overlap='{self.overlap}' needs "
                     f"bucket_mb > 0 (a bucket grid to pipeline over)")
+        if self.weighting == "canonical":
+            # one fixed reduction tree over global rows — any engine
+            # that regroups the sum (buckets, hierarchy, compression,
+            # accumulation) would break the bit-identity guarantee
+            for field, value, want in (
+                    ("grad_reduction", self.grad_reduction, "allreduce"),
+                    ("overlap", self.overlap, "none"),
+                    ("compression", self.compression, "none")):
+                if value != want:
+                    raise ValueError(
+                        f"HetConfig.weighting='canonical' requires "
+                        f"{field}='{want}', got '{value}' (the "
+                        f"order-canonical sum must be the only "
+                        f"reduction)")
+            if self.accum_steps != 1:
+                raise ValueError(
+                    "HetConfig.weighting='canonical' requires "
+                    f"accum_steps=1, got {self.accum_steps}")
         return self
 
 

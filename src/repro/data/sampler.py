@@ -20,7 +20,7 @@ from typing import Dict, Iterator, List, Optional, Sequence
 import numpy as np
 
 from repro.core.capacity import CapacityPlan
-from repro.core.dummy import pack_global_batch
+from repro.core.dummy import pack_global_batch, unpack_real_rows
 from repro.data.dataset import ShardedDataset
 
 
@@ -82,13 +82,15 @@ class HetSampler:
     def __init__(self, dataset: ShardedDataset, plan: CapacityPlan,
                  seed: int, input_field: str = "inputs",
                  label_field: str = "labels",
-                 max_tokens: Optional[int] = None):
+                 max_tokens: Optional[int] = None,
+                 canonical_order: bool = False):
         self.dataset = dataset
         self.plan = plan
         self.seed = seed
         self.input_field = input_field
         self.label_field = label_field
         self.max_tokens = max_tokens
+        self.canonical_order = canonical_order
 
     def set_plan(self, plan: CapacityPlan) -> None:
         """Capacity replan between steps (straggler feedback)."""
@@ -118,7 +120,28 @@ class HetSampler:
         samples = {"inputs": recs[self.input_field],
                    "labels": recs[self.label_field]}
         weights = recs.get("weights")
-        return pack_global_batch(samples, plan, token_weights=weights)
+        packed = pack_global_batch(samples, plan, token_weights=weights)
+        if not self.canonical_order:
+            return packed
+        # canonical mode (weighting="canonical"): rows in global-row
+        # order, NOT rank-buffer order — the order-canonical train step
+        # sums per-row grads along this axis with one fixed tree, so
+        # the layout must not depend on the plan. Partial batches pad
+        # with weight-0 rows at the END (a trailing zero term keeps the
+        # reduction tree of the real rows intact; an interleaved one
+        # would regroup it), keeping the batch shape static at
+        # global_rows.
+        real = unpack_real_rows(packed, plan)
+        rows = real["inputs"].shape[0]
+        target = self.plan.global_rows
+        if rows < target:
+            pad = target - rows
+            real = {
+                k: np.concatenate(
+                    [v, np.repeat(v[:1], pad, axis=0)], axis=0)
+                for k, v in real.items()}
+            real["weights"][rows:] = 0.0
+        return real
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         return self.iter_epoch(0)

@@ -202,6 +202,36 @@ def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh,
         treedef, [spec_for(p, l) for p, l in paths_leaves])
 
 
+def paged_cache_specs(cfg: ModelConfig, cache_shape: Any,
+                      mesh: Mesh) -> Any:
+    """Specs for the paged KV pool pytree.
+
+    Pool leaves are (L, N, bs, ...) — there is no batch dim, and the
+    block dims (N, bs) stay replicated so block tables index the same
+    physical slot on every rank. Only the feature dims shard: GQA KV
+    heads (or the MLA latent rank / rope dim) over "model" when
+    divisible.
+    """
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def spec_for(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        shape = leaf.shape
+        if re.search(r"(^|/)(k|v)$", key):
+            # (L, N, bs, Hkv, Dh): heads over tp when divisible
+            return fit_spec(shape, P(None, None, None, tp, None), mesh)
+        if re.search(r"c_kv$|k_rope$", key):
+            # (L, N, bs, r) / (L, N, bs, Dr): latent dim over tp
+            return fit_spec(shape, P(None, None, None, tp), mesh)
+        return fit_spec(shape, P(None, None), mesh)
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in paths_leaves])
+
+
 def named(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

@@ -43,6 +43,7 @@ allocation ever happens.
 from __future__ import annotations
 
 import functools
+import logging
 import math
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
@@ -61,6 +62,8 @@ from repro.launch.mesh import dp_axes as mesh_dp_axes, dp_size, tp_axis
 from repro.models.blocks import ParallelCtx
 from repro.models.model import Model
 from repro.optim import adam, lamb, schedules
+
+logger = logging.getLogger(__name__)
 
 # quantization block size for the compressed cross-pod exchanges
 _BLOCK = 256
@@ -1126,7 +1129,36 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
                 err=new_err if use_err else state.err)
             return new_state, metrics
 
+    canonical = tcfg.het.weighting == "canonical"
+
+    def canonical_step(state: TrainState, batch: Dict
+                       ) -> Tuple[TrainState, Dict]:
+        """Order-canonical executor (core/weighting.py), now a real
+        train-step mode instead of bench-only: per-row vmapped grads
+        summed along the global-row axis with ONE fixed reduction tree.
+        The row->rank partition drops out of the float math entirely,
+        so two runs consuming the same global rows are bit-identical
+        whatever capacity replans happened in between — provided the
+        sampler emits rows in canonical global order
+        (HetSampler(canonical_order=True))."""
+        def row_loss(p, b):
+            return model.loss_fn(p, b,
+                                 label_smoothing=tcfg.label_smoothing)
+
+        (o_r, w_r), g_r = weighting.per_row_values(
+            row_loss, state.params, batch)
+        loss, grads, _, w = weighting.canonical_aggregate(o_r, w_r, g_r)
+        lr = schedules.learning_rate(ocfg, state.opt.step + 1)
+        opt_apply = (lamb.apply_update if ocfg.name == "lamb"
+                     else adam.apply_update)
+        params, opt, met = opt_apply(state.params, grads,
+                                     state.opt, ocfg, lr)
+        metrics = {"loss": loss, "weight": w, **met}
+        return TrainState(params=params, opt=opt, err=state.err), metrics
+
     def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if canonical:
+            return canonical_step(state, batch)
         if overlap:
             return overlap_step(state, batch)
         if hier:
@@ -1279,6 +1311,107 @@ def build_decode_step(model: Model, shape: ShapeConfig, mesh: Mesh):
         in_shardings=(shr.named(mesh, pspecs),
                       NamedSharding(mesh, tok_spec),
                       shr.named(mesh, cspecs), None),
+        out_shardings=(NamedSharding(mesh, logit_spec),
+                       shr.named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+
+
+# --------------------------------------------------------------------------
+# paged serving steps (continuous batching, repro.serve)
+# --------------------------------------------------------------------------
+
+
+def serve_batch_spec(batch: int, mesh: Mesh, what: str):
+    """DP batch spec for a serving step — warns LOUDLY on fallback.
+
+    When ``batch`` is not divisible by the DP extent the arrays are
+    fully replicated: every rank embeds/unembeds the whole batch and
+    the DP axes do no work. That is a silent multi-x serving-throughput
+    loss, so it is worth a warning, not a comment (the old static
+    driver fell back without a word). Pick batch/slots as a multiple
+    of prod(devices[:-1]) to shard.
+    """
+    dp = mesh_dp_axes(mesh)
+    if batch % dp_size(mesh) == 0:
+        return dp
+    logger.warning(
+        "%s batch %d is not divisible by the DP extent %d of mesh %s — "
+        "falling back to FULLY-REPLICATED batch sharding (every rank "
+        "computes the whole batch; data-parallel ranks add no serving "
+        "throughput). Use a batch that is a multiple of the DP extent.",
+        what, batch, dp_size(mesh), tuple(mesh.shape.items()))
+    return None
+
+
+def build_paged_prefill_step(model: Model, mesh: Mesh, layout,
+                             bucket_len: int, batch: int):
+    """Jit one prefill bucket: (params, prompts (Bp, Lb), lens (Bp,),
+    paged_cache, block_tables (Bp, MB)) -> (logits (Bp, V), cache).
+
+    The pool cache is donated (argnum 3): prefill scatters into it in
+    place instead of copying the whole pool per admitted group.
+    """
+    cfg = model.cfg
+    ctx = make_parallel_ctx(mesh)
+
+    def prefill(params, prompts, lens, cache, tables):
+        return model.prefill_paged(params, prompts, lens, cache, tables,
+                                   ctx)
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = shr.param_specs(cfg, params_shape, mesh)
+    bspec = serve_batch_spec(batch, mesh, "prefill")
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_paged_cache, layout))
+    cspecs = shr.paged_cache_specs(cfg, cache_shape, mesh)
+    logit_spec = shr.fit_spec((batch, cfg.vocab_size), P(bspec, "model"),
+                              mesh)
+    return jax.jit(
+        prefill,
+        in_shardings=(shr.named(mesh, pspecs),
+                      NamedSharding(mesh, P(bspec, None)),
+                      NamedSharding(mesh, P(bspec)),
+                      shr.named(mesh, cspecs),
+                      NamedSharding(mesh, P(bspec, None))),
+        out_shardings=(NamedSharding(mesh, logit_spec),
+                       shr.named(mesh, cspecs)),
+        donate_argnums=(3,),
+    )
+
+
+def build_paged_decode_step(model: Model, mesh: Mesh, layout,
+                            slots: int):
+    """Jit the continuous decode step: (params, tokens (D,), paged_cache,
+    block_tables (D, MB), kv_lens (D,)) -> (logits (D, V), cache).
+
+    One fixed shape for the whole serve loop — per-sequence depth lives
+    in ``kv_lens``, membership in the block tables — so the engine can
+    assert the function never retraces. The pool is donated (argnum 2):
+    decode updates it in place, no per-step full-cache copy.
+    """
+    cfg = model.cfg
+    ctx = make_parallel_ctx(mesh)
+
+    def decode(params, tokens, cache, tables, kv_lens):
+        return model.decode_paged(params, tokens, cache, tables, kv_lens,
+                                  ctx)
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = shr.param_specs(cfg, params_shape, mesh)
+    bspec = serve_batch_spec(slots, mesh, "decode")
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_paged_cache, layout))
+    cspecs = shr.paged_cache_specs(cfg, cache_shape, mesh)
+    logit_spec = shr.fit_spec((slots, cfg.vocab_size), P(bspec, "model"),
+                              mesh)
+    return jax.jit(
+        decode,
+        in_shardings=(shr.named(mesh, pspecs),
+                      NamedSharding(mesh, P(bspec)),
+                      shr.named(mesh, cspecs),
+                      NamedSharding(mesh, P(bspec, None)),
+                      NamedSharding(mesh, P(bspec))),
         out_shardings=(NamedSharding(mesh, logit_spec),
                        shr.named(mesh, cspecs)),
         donate_argnums=(2,),

@@ -88,6 +88,7 @@ def build_everything(args):
         het=HetConfig(
             capacities=tuple(float(c) for c in args.capacities.split(","))
             if args.capacities else (),
+            weighting=args.weighting,
             grad_reduction=args.grad_reduction,
             compression=args.compression,
             bucket_mb=args.bucket_mb,
@@ -213,9 +214,15 @@ def train(args) -> Dict[str, float]:
         re-mesh)."""
         with compat.set_mesh(mesh):
             step_fn = steps_mod.build_train_step(model, tcfg, mesh)
-        sampler = HetSampler(ds, plan, seed=tcfg.seed)
+        canonical = tcfg.het.weighting == "canonical"
+        sampler = HetSampler(ds, plan, seed=tcfg.seed,
+                             canonical_order=canonical)
         loader = PrefetchLoader(sampler, depth=args.prefetch)
-        bspecs = named(mesh, batch_specs(cfg, mesh, plan.padded_rows))
+        # canonical batches are global-row-ordered (global_rows rows,
+        # plan-independent); packed batches are rank-buffer-ordered
+        # (padded_rows rows)
+        batch_rows = plan.global_rows if canonical else plan.padded_rows
+        bspecs = named(mesh, batch_specs(cfg, mesh, batch_rows))
         fmt = steps_mod.checkpoint_format(model, tcfg, mesh)
         return step_fn, sampler, loader, bspecs, fmt
 
@@ -454,6 +461,12 @@ def main():
                     help="mesh shape: data,model or pod,data,model")
     ap.add_argument("--capacities", default="",
                     help="per-DP-rank relative capacities, e.g. 2,1,1,0")
+    ap.add_argument("--weighting", default="tokens",
+                    choices=list(cfgbase.WEIGHTING_MODES),
+                    help="'canonical': order-canonical executor — "
+                         "per-row grads summed in global-row order, "
+                         "bit-identical across capacity replans (needs "
+                         "plain allreduce, no overlap/compression)")
     ap.add_argument("--grad-reduction", default="allreduce",
                     choices=list(cfgbase.GRAD_REDUCTION_MODES))
     ap.add_argument("--compression", default="none",

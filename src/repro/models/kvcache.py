@@ -1,9 +1,27 @@
 """KV caches and single-token decode attention (GQA + absorbed MLA).
 
-Cache layouts (per layer; stacked with a leading L dim by the stack):
+Two cache families live here:
+
+**Contiguous** (static-batch serving, one slab per sequence slot;
+stacked with a leading L dim by the stack):
   GQA : k/v (B, S_max, Hkv, Dh) in compute dtype
   MLA : c_kv (B, S_max, r) latent + k_rope (B, S_max, Dr) — the
         compressed-latent cache that makes DeepSeek-V2 decode cheap.
+
+**Paged** (continuous-batching serving, ``repro.serve``): the cache is
+a pool of fixed-size blocks — the inference twin of the flat bucket
+stack in core/buckets.py — and each sequence owns a *block table*
+mapping its logical block j to a physical pool slot:
+  GQA : k/v (L, N, bs, Hkv, Dh)
+  MLA : c_kv (L, N, bs, r) + k_rope (L, N, bs, Dr)
+where N = pool blocks and bs = block size. Decode takes a per-sequence
+``kv_lens`` vector instead of the scalar ``pos``: every sequence in the
+batch sits at its own depth, so long and short requests share one
+decode step without padding to the global max. Writes at out-of-pool
+block ids (the NULL_BLOCK sentinel of retired/empty slots) are
+dropped; gathers of unmapped blocks return zeros, exactly matching the
+zero-initialized contiguous cache — which is what keeps the paged path
+bit-identical to the static path in fp32.
 
 Decode attention is single-query attention over the cache with a
 ``kv_len`` mask; MLA uses the *absorbed* formulation: W_uk is folded into
@@ -14,11 +32,14 @@ Sharding at scale (launch/sharding.py): caches shard batch over the DP
 axes; when per-device batch is small and the cache is large (deepseek
 decode_32k), the sequence dim shards over "model" instead and the
 softmax is computed with a cross-shard logsumexp fix-up (split-K) — see
-launch/steps.py.
+launch/steps.py. Paged pools shard KV heads / the latent rank over
+"model" (``sharding.paged_cache_specs``); the block dim stays
+replicated so block tables index identically on every rank.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +153,202 @@ def mla_decode(params, x: jnp.ndarray, cfg: ModelConfig, ctx: ParallelCtx,
     scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
     out_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache,
+                         preferred_element_type=jnp.float32)
+    w_uv = _cast(params["w_uv"], cdt).reshape(
+        m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat.astype(cdt), w_uv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(cdt)
+    y = out @ _cast(params["wo"], cdt)
+    return (constrain(y, ctx, batch_spec(ctx, None, None)),
+            (ckv_cache, kr_cache))
+
+
+# --------------------------------------------------------------------------
+# paged cache: layout, constructors, prefill scatter
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Geometry of a paged KV pool.
+
+    The pool holds ``num_blocks`` physical blocks of ``block_size``
+    tokens each; a sequence may map at most ``max_blocks_per_seq``
+    logical blocks. Unmapped block-table entries hold ``null_block``
+    (== num_blocks, one past the pool): scatters there are dropped and
+    gathers there fill with zeros, so a NULL entry behaves exactly like
+    untouched zero-initialized cache.
+    """
+    block_size: int
+    num_blocks: int
+    max_blocks_per_seq: int
+
+    def __post_init__(self):
+        if self.block_size <= 0 or self.num_blocks <= 0:
+            raise ValueError(
+                f"PagedLayout needs positive block_size/num_blocks, got "
+                f"{self.block_size}/{self.num_blocks}")
+        if self.max_blocks_per_seq <= 0:
+            raise ValueError("PagedLayout.max_blocks_per_seq must be "
+                             f"positive, got {self.max_blocks_per_seq}")
+
+    @property
+    def null_block(self) -> int:
+        return self.num_blocks
+
+    @property
+    def max_seq_len(self) -> int:
+        return self.block_size * self.max_blocks_per_seq
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold n_tokens (ceil-div; 0 tokens -> 0)."""
+        return -(-n_tokens // self.block_size)
+
+
+def init_gqa_paged_cache(cfg: ModelConfig, num_layers: int,
+                         layout: PagedLayout) -> Dict[str, jnp.ndarray]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    shape = (num_layers, layout.num_blocks, layout.block_size,
+             cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt)}
+
+
+def init_mla_paged_cache(cfg: ModelConfig, num_layers: int,
+                         layout: PagedLayout) -> Dict[str, jnp.ndarray]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    m = cfg.mla
+    base = (num_layers, layout.num_blocks, layout.block_size)
+    return {
+        "c_kv": jnp.zeros(base + (m.kv_lora_rank,), cdt),
+        "k_rope": jnp.zeros(base + (m.rope_head_dim,), cdt),
+    }
+
+
+def write_prefill_blocks(paged: Dict[str, jnp.ndarray],
+                         contiguous: Dict[str, jnp.ndarray],
+                         block_tables: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Scatter a contiguous prefill cache into the paged pool.
+
+    ``contiguous`` leaves are (L, B, S_pad, ...) with S_pad a multiple
+    of the block size; ``block_tables`` is (B, >= S_pad // bs). Row j
+    of sequence i's chunked cache lands in physical block
+    ``block_tables[i, j]``; NULL entries drop the write. Tokens past a
+    sequence's real length carry padding-token K/V — they are masked
+    out by the per-sequence ``kv_lens`` at decode and overwritten in
+    place as decode advances, so they never reach an output.
+    """
+    def _scatter(dst, src):
+        l, b, s_pad = src.shape[:3]
+        bs = dst.shape[2]
+        if s_pad % bs:
+            raise ValueError(
+                f"prefill length {s_pad} not a multiple of block size "
+                f"{bs}")
+        nc = s_pad // bs
+        chunks = src.reshape((l, b, nc, bs) + src.shape[3:])
+        return dst.at[:, block_tables[:, :nc]].set(
+            chunks.astype(dst.dtype), mode="drop")
+
+    return {name: _scatter(paged[name], contiguous[name])
+            for name in paged}
+
+
+# --------------------------------------------------------------------------
+# paged GQA decode (per-sequence kv_lens + block tables)
+# --------------------------------------------------------------------------
+
+
+def attention_decode_paged(params, x: jnp.ndarray, cfg: ModelConfig,
+                           ctx: ParallelCtx, k_cache: jnp.ndarray,
+                           v_cache: jnp.ndarray,
+                           block_tables: jnp.ndarray,
+                           kv_lens: jnp.ndarray):
+    """One-token attention over a paged pool, one depth per sequence.
+
+    x (B, 1, d); caches (N, bs, Hkv, Dh); block_tables (B, MB) int32;
+    kv_lens (B,) int32 — tokens already cached per sequence (the new
+    token is written at position kv_lens[i] and attended to, so the
+    effective context is kv_lens + 1). Sequences whose current block
+    is NULL (inactive slots) write nowhere, gather zeros, and produce
+    garbage the caller discards.
+    Returns (y (B, 1, d), (k_cache, v_cache) updated).
+    """
+    b = x.shape[0]
+    bs = k_cache.shape[1]
+    positions = kv_lens[:, None]                        # (B, 1)
+    q, k, v = attention_qkv(params, x, cfg, positions)
+    blk = jnp.take_along_axis(
+        block_tables, (kv_lens // bs)[:, None], axis=1)[:, 0]
+    off = kv_lens % bs
+    k_cache = k_cache.at[blk, off].set(
+        k[:, 0].astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[blk, off].set(
+        v[:, 0].astype(v_cache.dtype), mode="drop")
+    # gather each sequence's mapped blocks back into a dense view; NULL
+    # entries fill with zeros — bit-identical to untouched contiguous
+    # cache, which keeps this path bitwise equal to attention_decode in
+    # fp32 (same dense reduction shape, masked tails exactly 0.0).
+    k_g = k_cache.at[block_tables].get(
+        mode="fill", fill_value=0).reshape(b, -1, *k_cache.shape[2:])
+    v_g = v_cache.at[block_tables].get(
+        mode="fill", fill_value=0).reshape(b, -1, *v_cache.shape[2:])
+    out = attn_ref.mha_dense(q, k_g, v_g, causal=False,
+                             kv_len=kv_lens + 1)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    y = out @ _cast(params["wo"], cfg.compute_dtype)
+    return constrain(y, ctx, batch_spec(ctx, None, None)), (k_cache, v_cache)
+
+
+# --------------------------------------------------------------------------
+# paged MLA decode (absorbed, latent-space attention)
+# --------------------------------------------------------------------------
+
+
+def mla_decode_paged(params, x: jnp.ndarray, cfg: ModelConfig,
+                     ctx: ParallelCtx, ckv_cache: jnp.ndarray,
+                     kr_cache: jnp.ndarray, block_tables: jnp.ndarray,
+                     kv_lens: jnp.ndarray):
+    """Paged twin of :func:`mla_decode`.
+
+    x (B, 1, d); ckv_cache (N, bs, r); kr_cache (N, bs, Dr);
+    block_tables (B, MB); kv_lens (B,). Same absorbed formulation —
+    scores against the gathered latent view, mask positions >= kv_len+1.
+    """
+    b = x.shape[0]
+    m, h = cfg.mla, cfg.num_heads
+    cdt = cfg.compute_dtype
+    bs = ckv_cache.shape[1]
+    positions = kv_lens[:, None]                        # (B, 1)
+    q_nope, q_rope = mla_queries(params, x, cfg, positions)  # (B,1,H,*)
+    c_kv, k_r = mla_latent(params, x, cfg, positions)   # (B,1,r),(B,1,Dr)
+    blk = jnp.take_along_axis(
+        block_tables, (kv_lens // bs)[:, None], axis=1)[:, 0]
+    off = kv_lens % bs
+    ckv_cache = ckv_cache.at[blk, off].set(
+        c_kv[:, 0].astype(ckv_cache.dtype), mode="drop")
+    kr_cache = kr_cache.at[blk, off].set(
+        k_r[:, 0].astype(kr_cache.dtype), mode="drop")
+    ckv_g = ckv_cache.at[block_tables].get(
+        mode="fill", fill_value=0).reshape(b, -1, m.kv_lora_rank)
+    kr_g = kr_cache.at[block_tables].get(
+        mode="fill", fill_value=0).reshape(b, -1, m.rope_head_dim)
+
+    w_uk = _cast(params["w_uk"], cdt).reshape(
+        m.kv_lora_rank, h, m.nope_head_dim)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32).astype(cdt)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv_g,
+                         preferred_element_type=jnp.float32) +
+              jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(cdt),
+                         kr_g,
+                         preferred_element_type=jnp.float32)) * scale
+    s_g = ckv_g.shape[1]
+    mask = jnp.arange(s_g)[None, None, :] < (kv_lens + 1)[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_g,
                          preferred_element_type=jnp.float32)
     w_uv = _cast(params["w_uv"], cdt).reshape(
         m.kv_lora_rank, h, m.v_head_dim)

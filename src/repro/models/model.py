@@ -47,6 +47,10 @@ class Model:
     prefill: Callable[..., Tuple[jnp.ndarray, Any]]
     decode: Callable[..., Tuple[jnp.ndarray, Any]]
     init_cache: Callable[..., Any]
+    # paged serving path (continuous batching, repro.serve)
+    prefill_paged: Callable[..., Tuple[jnp.ndarray, Any]]
+    decode_paged: Callable[..., Tuple[jnp.ndarray, Any]]
+    init_paged_cache: Callable[..., Any]
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -116,6 +120,45 @@ def build_model(cfg: ModelConfig) -> Model:
     def init_cache(batch: int, max_len: int):
         return tr.init_cache(cfg, batch, max_len)
 
+    def prefill_paged(params, inputs, lens, paged_cache, block_tables,
+                      ctx: ParallelCtx = LOCAL_CTX):
+        """Prefill a length-bucketed chunk into the paged pool.
+
+        inputs (B, S) token ids padded to the bucket length S (a
+        multiple of the block size); lens (B,) real prompt lengths;
+        block_tables (B, MB). Returns (per-sequence next-token logits
+        (B, V) taken at each sequence's own last real token, updated
+        paged cache).
+        """
+        from repro.models import kvcache as kvc
+        s = inputs.shape[1]
+        x = tr.embed_tokens(params, inputs, cfg, ctx)
+        hidden, contiguous = tr.prefill(params, x, cfg, ctx, s)
+        last = jnp.clip(lens - 1, 0, s - 1)[:, None, None]
+        h_last = jnp.take_along_axis(hidden, last, axis=1)
+        logits = tr.unembed(params, h_last, cfg, ctx)[:, 0, :]
+        cache = kvc.write_prefill_blocks(paged_cache, contiguous,
+                                         block_tables)
+        return logits, cache
+
+    def decode_paged(params, inputs, paged_cache, block_tables, kv_lens,
+                     ctx: ParallelCtx = LOCAL_CTX):
+        """inputs: token ids (B,); kv_lens (B,) per-sequence depths."""
+        if cfg.frontend != "token":
+            raise ValueError("paged decode supports the token frontend "
+                             f"only, got {cfg.frontend!r}")
+        x = tr.embed_tokens(params, inputs[:, None], cfg, ctx)
+        hidden, cache = tr.decode_step_paged(params, x, cfg, ctx,
+                                             paged_cache, block_tables,
+                                             kv_lens)
+        logits = tr.unembed(params, hidden, cfg, ctx)[:, 0, :]
+        return logits, cache
+
+    def init_paged_cache(layout):
+        return tr.init_paged_cache(cfg, layout)
+
     return Model(cfg=cfg, init_params=init_params, loss_fn=loss_fn,
                  logits_fn=logits_fn, prefill=prefill, decode=decode,
-                 init_cache=init_cache)
+                 init_cache=init_cache, prefill_paged=prefill_paged,
+                 decode_paged=decode_paged,
+                 init_paged_cache=init_paged_cache)

@@ -31,8 +31,11 @@ from repro.models.blocks import (LOCAL_CTX, ParallelCtx, _cast, apply_norm,
                                  dense_init, embed_init, init_attention,
                                  init_mla, init_mlp, init_moe, init_norm,
                                  mla_block, mlp_block, moe_block)
-from repro.models.kvcache import (attention_decode, init_gqa_cache,
-                                  init_mla_cache, mla_decode)
+from repro.models.kvcache import (PagedLayout, attention_decode,
+                                  attention_decode_paged, init_gqa_cache,
+                                  init_gqa_paged_cache, init_mla_cache,
+                                  init_mla_paged_cache, mla_decode,
+                                  mla_decode_paged)
 from repro.models.ssm import (init_mamba, mamba_block, mamba_decode_step,
                               mamba_dims)
 
@@ -132,6 +135,33 @@ def apply_uniform_layer_decode(p, x, cfg, ctx, cache_l, pos):
     else:
         a, new_cache = attention_decode(p["attn"], h, cfg, ctx,
                                         cache_l["k"], cache_l["v"], pos)
+        new_cache = {"k": new_cache[0], "v": new_cache[1]}
+    x = x + a
+    h2 = apply_norm(p["ln2"], x, cfg)
+    if "moe" in p:
+        m, _ = moe_block(p["moe"], h2, cfg, ctx, train=False)
+        if "dense" in p:
+            m = m + mlp_block(p["dense"], h2, cfg, ctx)
+    else:
+        m = mlp_block(p["mlp"], h2, cfg, ctx)
+    return x + m, new_cache
+
+
+def apply_uniform_layer_decode_paged(p, x, cfg, ctx, cache_l,
+                                     block_tables, kv_lens):
+    """Paged twin of apply_uniform_layer_decode: per-layer pool caches
+    (N, bs, ...) addressed through per-sequence block tables + kv_lens
+    instead of a contiguous (B, S_max, ...) slab and a scalar pos."""
+    h = apply_norm(p["ln1"], x, cfg)
+    if cfg.mla.enabled:
+        a, new_cache = mla_decode_paged(p["attn"], h, cfg, ctx,
+                                        cache_l["c_kv"], cache_l["k_rope"],
+                                        block_tables, kv_lens)
+        new_cache = {"c_kv": new_cache[0], "k_rope": new_cache[1]}
+    else:
+        a, new_cache = attention_decode_paged(p["attn"], h, cfg, ctx,
+                                              cache_l["k"], cache_l["v"],
+                                              block_tables, kv_lens)
         new_cache = {"k": new_cache[0], "v": new_cache[1]}
     x = x + a
     h2 = apply_norm(p["ln2"], x, cfg)
@@ -648,4 +678,44 @@ def decode_step(params, embeds: jnp.ndarray, cfg: ModelConfig,
         new_cache = {"mlstm": (mst2[0], mst2[1]),
                      "slstm": (sst2[0], sst2[1])}
 
+    return apply_norm(params["final_norm"], x, cfg), new_cache
+
+
+# --------------------------------------------------------------------------
+# paged decode: per-sequence depths over a shared block pool
+# --------------------------------------------------------------------------
+
+
+def init_paged_cache(cfg: ModelConfig, layout: PagedLayout) -> Any:
+    """Zero-initialized paged block pool (uniform attention stacks only:
+    recurrent plans keep O(1) state per sequence — nothing to page)."""
+    plan = stack_plan(cfg)
+    if plan != "uniform":
+        raise ValueError(
+            f"paged KV cache supports the uniform attention stack only, "
+            f"got stack plan {plan!r}")
+    if cfg.mla.enabled:
+        return init_mla_paged_cache(cfg, cfg.num_layers, layout)
+    return init_gqa_paged_cache(cfg, cfg.num_layers, layout)
+
+
+def decode_step_paged(params, embeds: jnp.ndarray, cfg: ModelConfig,
+                      ctx: ParallelCtx, cache: Any,
+                      block_tables: jnp.ndarray, kv_lens: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, Any]:
+    """One token per sequence against the paged pool.
+
+    embeds (B, 1, d); block_tables (B, MB) int32; kv_lens (B,) int32 —
+    each sequence attends to its own kv_lens[i] cached tokens plus the
+    new one. Returns (hidden (B, 1, d), cache).
+    """
+    if stack_plan(cfg) != "uniform":
+        raise ValueError("decode_step_paged requires the uniform stack")
+
+    def body(xc, inp):
+        lp, cache_l = inp
+        x2, new_cache = apply_uniform_layer_decode_paged(
+            lp, xc, cfg, ctx, cache_l, block_tables, kv_lens)
+        return x2, new_cache
+    x, new_cache = jax.lax.scan(body, embeds, (params["layers"], cache))
     return apply_norm(params["final_norm"], x, cfg), new_cache

@@ -1,0 +1,17 @@
+"""Continuous-batching serving engine on the heterogeneous mesh.
+
+- blocks.py    — paged-pool free-list allocator, per-pod extents
+- router.py    — capacity-aware request routing (CapacityPlan limits)
+- scheduler.py — admission / preemption / length-bucketed prefill
+- engine.py    — the decode loop tying it all together
+
+See docs/architecture.md §serving engine.
+"""
+from repro.serve.blocks import BlockPool, pod_block_pools
+from repro.serve.engine import EngineConfig, ServeEngine, ServeResult
+from repro.serve.router import CapacityRouter
+from repro.serve.scheduler import Request, Scheduler, SeqState
+
+__all__ = ["BlockPool", "pod_block_pools", "CapacityRouter", "Request",
+           "Scheduler", "SeqState", "EngineConfig", "ServeEngine",
+           "ServeResult"]

@@ -216,6 +216,33 @@ def test_readme_quickstart_flags_exist_in_train_cli():
                     f"known: {sorted(real_flags)}")
 
 
+def test_readme_serve_flag_table_matches_serve_cli(readme_tables):
+    """The serving section's flag table lists EXACTLY the serve
+    driver's argparse options — a flag added/renamed in
+    launch/serve.py without a README row (or vice versa) fails."""
+    from repro.launch import serve as serve_mod
+
+    table = _find_table(readme_tables, "flag", "default", "meaning")
+    documented = {row[0].strip("`") for row in table[1:]}
+    import argparse
+    real_flags = set()
+    orig = argparse.ArgumentParser.parse_args
+    try:
+        argparse.ArgumentParser.parse_args = lambda self, *a, **k: (
+            real_flags.update(o for action in self._actions
+                              for o in action.option_strings),
+            sys.exit(0))[1]
+        with pytest.raises(SystemExit):
+            serve_mod.main()
+    finally:
+        argparse.ArgumentParser.parse_args = orig
+    real_flags -= {"-h", "--help"}
+    assert documented == real_flags, (
+        f"README serve flag table out of sync with launch/serve.py:\n"
+        f"documented-only={sorted(documented - real_flags)}\n"
+        f"parser-only={sorted(real_flags - documented)}")
+
+
 def test_label_smoothing_is_wired_through_the_train_step():
     """TrainConfig.label_smoothing is a LIVE knob (the docstring says
     so): it must reach the CE loss both via loss_fn and via

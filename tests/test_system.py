@@ -61,11 +61,17 @@ def test_train_driver_resume(tmp_path):
 
 @pytest.mark.slow
 def test_serve_driver(tmp_path):
+    """The continuous-batching serve driver end to end on a DP mesh
+    with skewed pod speeds: every request completes and the engine
+    reports the modeled throughput/latency stats."""
     out = run_cli([
         "repro.launch.serve", "--arch", "tinyllama-1.1b", "--smoke",
-        "--batch", "4", "--prompt-len", "16", "--gen", "8",
-        "--devices", "2,2"])
-    assert "tok/s" in out
+        "--slots", "4", "--prefill-batch", "2", "--requests", "8",
+        "--max-prompt", "24", "--max-gen", "16",
+        "--pod-speeds", "1,0.5", "--devices", "2,2"])
+    assert "8 requests" in out
+    assert "tok/unit" in out
+    assert "decode steps" in out
 
 
 @pytest.mark.slow
