@@ -43,6 +43,16 @@ DOC = """Benchmark suite — one entry per paper table/figure + roofline.
                        the capacity-plan split (slower pods strictly
                        fewer sequences); includes a 3-arrival
                        mixed-length end-to-end smoke
+  pipeline_bench       heterogeneous pipeline parallelism
+                       (HetConfig.pipeline_stages: capacity-sized
+                       contiguous stages + 1F1B): fails loudly if the
+                       stages=2 step is not bit-identical (fp32,
+                       allreduce, clip=0) to pure DP, if the modeled
+                       capacity-sized stage cut does not strictly beat
+                       uniform stages AND pure DP on a 2:1 pod-speed
+                       skew, or if a checkpoint saved under one stage
+                       plan does not restore bit-identically into a
+                       different stage plan
   durability_smoke     (--quick only) checkpoint manifest path: save ->
                        corrupt a shard / delete the manifest ->
                        checksum-validated fallback restore to the
@@ -92,7 +102,8 @@ def main() -> None:
     csv = []
 
     from benchmarks import (chaos_bench, equivalence, overlap_bench,
-                            reduce_bench, roofline_bench, scaling_bert,
+                            pipeline_bench, reduce_bench,
+                            roofline_bench, scaling_bert,
                             scaling_small, scaling_translation,
                             serve_bench)
 
@@ -116,6 +127,15 @@ def main() -> None:
                 f"bit_identical_presets={n_bit}/{len(cb['presets'])} "
                 f"replan_speedup="
                 f"{cb['slowdown_wall']['speedup']:.2f}x"))
+
+    pb = pipeline_bench.main(quick=args.quick)
+    csv.append(("pipeline_bench", 0.0,
+                f"exact_fp32={pb['exactness']['exact_match']} "
+                f"capacity_vs_uniform="
+                f"{pb['modeled']['speedup_vs_uniform']:.2f}x "
+                f"vs_dp={pb['modeled']['speedup_vs_dp']:.2f}x "
+                f"restore_bit_identical="
+                f"{pb['restore']['bit_identical']}"))
 
     sv = serve_bench.main(quick=args.quick)
     csv.append(("serve_bench", 0.0,

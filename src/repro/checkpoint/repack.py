@@ -335,6 +335,14 @@ def adapt_arrays(arrays: Dict[str, np.ndarray], template: Any,
         raise ValueError(
             f"checkpoint format version {version} is newer than this "
             f"build supports ({FORMAT_VERSION})")
+    if fmt.get("pipeline") is not None:
+        # stage partition that wrote the checkpoint: params are stored
+        # per-leaf so NO translation is needed across stage plans, but
+        # a malformed record means the writer was broken — fail the
+        # restore loudly instead of resuming from a suspect checkpoint
+        from repro.core import pipeline as _pipe
+
+        _pipe.stage_from_record(fmt["pipeline"])
     record = fmt.get("layout") or None
 
     template_flat = flatten_with_paths(template)

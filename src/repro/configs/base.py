@@ -208,6 +208,7 @@ OVERLAP_MODES = ("none", "buckets", "backward")
 COMPRESSION_MODES = ("none", "int8")
 QUANTIZE_IMPLS = ("reference", "pallas")
 WEIGHTING_MODES = ("tokens", "samples", "canonical")
+PIPELINE_MODES = ("1f1b", "gpipe")
 
 # Which grad_reduction modes the overlap pipelines schedule: overlap is
 # a schedule OF the explicit bucketed engine, so it needs one of these
@@ -259,10 +260,22 @@ class HetConfig:
         clipping and LAMB keep the pipelined exchange but update
         behind a barrier.
     ``accum_steps``: gradient-accumulation microbatch count (paper M4
-        delayed update); >= 1.
+        delayed update); >= 1. With ``pipeline_stages > 1`` the
+        microbatches ARE the pipeline's 1F1B stream, so
+        ``accum_steps >= pipeline_stages`` (the pipe must fill).
     ``straggler_ema``: EMA decay of per-rank step-time tracking in
         [0, 1) (core/straggler.py).
     ``replan_interval``: steps between soft capacity replans; >= 1.
+    ``pipeline_stages``: contiguous layer-stack stages (core/pipeline.py
+        StagePlan, sized by per-pod capacity scores); 1 = no pipelining.
+        > 1 requires a uniform-stack architecture with
+        ``scan_layers=False`` (checked at build time), overlap="none"
+        (the overlap pipelines flush buckets over the DP axes
+        mid-backward, which cannot cross a stage boundary),
+        weighting != "canonical", and grad_reduction "allreduce" or
+        "bucketed_allreduce".
+    ``pipeline_schedule``: "1f1b" (warmup / steady 1F1B / drain) |
+        "gpipe" (all forwards then all backwards); see PIPELINE_MODES.
     """
 
     capacities: Tuple[float, ...] = ()      # empty => homogeneous
@@ -276,6 +289,8 @@ class HetConfig:
     accum_steps: int = 1                    # delayed update (paper M4)
     straggler_ema: float = 0.9
     replan_interval: int = 100              # steps between capacity replans
+    pipeline_stages: int = 1                # >1 => pipelined layer stack
+    pipeline_schedule: str = "1f1b"         # see PIPELINE_MODES
 
     def validate(self) -> "HetConfig":
         """Mesh-independent config validation. Raises ``ValueError``
@@ -294,6 +309,11 @@ class HetConfig:
         member("compression", self.compression, COMPRESSION_MODES)
         member("quantize_impl", self.quantize_impl, QUANTIZE_IMPLS)
         member("overlap", self.overlap, OVERLAP_MODES)
+        member("pipeline_schedule", self.pipeline_schedule, PIPELINE_MODES)
+        if self.pipeline_stages < 1:
+            raise ValueError(
+                f"HetConfig.pipeline_stages must be >= 1, got "
+                f"{self.pipeline_stages}")
         if self.bucket_mb < 0:
             raise ValueError(
                 f"HetConfig.bucket_mb must be >= 0, got {self.bucket_mb}")
@@ -347,6 +367,35 @@ class HetConfig:
                 raise ValueError(
                     "HetConfig.weighting='canonical' requires "
                     f"accum_steps=1, got {self.accum_steps}")
+        if self.pipeline_stages > 1:
+            if self.overlap != "none":
+                raise ValueError(
+                    f"HetConfig.overlap='{self.overlap}' is incompatible "
+                    f"with pipeline_stages={self.pipeline_stages}: the "
+                    "overlap pipelines flush grad buckets over the DP "
+                    "axes mid-backward, which cannot cross a pipeline "
+                    "stage boundary (each stage owns only its layer "
+                    "slice); use overlap='none' — the pipeline step "
+                    "already reduces grads per-stage")
+            if self.weighting == "canonical":
+                raise ValueError(
+                    "HetConfig.weighting='canonical' is incompatible "
+                    f"with pipeline_stages={self.pipeline_stages}: the "
+                    "order-canonical executor needs one fixed "
+                    "whole-model reduction tree, but 1F1B regroups the "
+                    "sum per (stage, microbatch)")
+            if self.grad_reduction == "hierarchical":
+                raise ValueError(
+                    "HetConfig.grad_reduction='hierarchical' is not "
+                    f"supported with pipeline_stages="
+                    f"{self.pipeline_stages}; use 'allreduce' or "
+                    "'bucketed_allreduce' (per-stage bucket flush)")
+            if self.accum_steps < self.pipeline_stages:
+                raise ValueError(
+                    f"HetConfig.pipeline_stages={self.pipeline_stages} "
+                    f"needs accum_steps >= pipeline_stages (got "
+                    f"{self.accum_steps}): the accumulation microbatches "
+                    "are the 1F1B stream and the pipe must fill")
         return self
 
 

@@ -157,12 +157,27 @@ def replan_from_step_times(plan: CapacityPlan,
     """Straggler feedback: capacity ∝ measured throughput (rows/sec).
 
     A rank processing its rows slowly gets proportionally fewer next
-    window. Dead ranks (ema = inf) get capacity 0 (all-dummy).
+    window. Dead ranks (ema = inf) get capacity 0 (all-dummy) — inf is
+    the ONLY sanctioned dead-rank marker. A finite measurement <= 0 or
+    a NaN is not a slow rank, it is a broken monitor feeding the
+    planner garbage; silently zeroing it would quietly starve a healthy
+    rank, so those raise loudly naming the offending ranks.
     """
     ema = np.asarray(step_time_ema, np.float64)
+    if ema.shape != (plan.num_ranks,):
+        raise ValueError(
+            f"step_time_ema has shape {ema.shape}, plan has "
+            f"{plan.num_ranks} ranks")
+    bad = np.nonzero(np.isnan(ema) | (np.isfinite(ema) & (ema <= 0)))[0]
+    if bad.size:
+        raise ValueError(
+            f"measured step times must be positive (inf = dead rank); "
+            f"ranks {bad.tolist()} reported "
+            f"{ema[bad].tolist()} — a zero/negative/NaN step time is a "
+            "broken measurement, not a fast rank")
     rows = np.maximum(plan.rows_per_rank.astype(np.float64), 1.0)
     with np.errstate(divide="ignore"):
-        throughput = np.where(np.isfinite(ema) & (ema > 0), rows / ema, 0.0)
+        throughput = np.where(np.isfinite(ema), rows / ema, 0.0)
     if throughput.sum() <= 0:
         raise ValueError("all ranks dead")
     return plan_capacities(plan.global_rows, throughput,

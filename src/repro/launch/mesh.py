@@ -17,24 +17,42 @@ import jax
 from jax.sharding import Mesh
 
 
-def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+def make_production_mesh(*, multi_pod: bool = False, pipe: int = 1) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pipe > 1:
+        shape = (pipe,) + shape
+        axes = ("pipe",) + axes
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+def make_local_mesh(data: int = 1, model: int = 1, pipe: int = 1) -> Mesh:
     """Small mesh over however many (host) devices exist — for tests."""
+    if pipe > 1:
+        return jax.make_mesh((pipe, data, model), ("pipe", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
-    """The data-parallel axes: ("pod","data") when pod exists."""
+    """The data-parallel axes: ("pod","data") when pod exists.
+
+    Never includes "pipe" — pipeline stages replicate params/batch over
+    the pipe axis and exchange only stage-boundary activations, so DP
+    collectives (grad reduction, weighting sums) must not span it.
+    """
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
 def tp_axis(mesh: Mesh) -> Optional[str]:
     return "model" if "model" in mesh.axis_names else None
+
+
+def pipe_axis(mesh: Mesh) -> Optional[str]:
+    return "pipe" if "pipe" in mesh.axis_names else None
+
+
+def pipe_size(mesh: Mesh) -> int:
+    return mesh.shape["pipe"] if "pipe" in mesh.axis_names else 1
 
 
 def dp_size(mesh: Mesh) -> int:

@@ -154,6 +154,49 @@ def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
 # --------------------------------------------------------------------------
 
 
+def stage_activation_spec(mesh: Mesh, rows: int) -> P:
+    """Spec for the (B, S, D) hidden stream crossing a stage boundary.
+
+    Batch over the DP axes (when divisible); replicated over "pipe" —
+    every stage sees the full stream and ``steps._pipe_send`` moves it
+    between stages in program order — and over "model" (the blocks
+    apply their own internal constraints).
+    """
+    dp = mesh_dp_axes(mesh)
+    bspec = dp if rows % _axis_size(mesh, dp) == 0 else None
+    return P(bspec, None, None)
+
+
+def stage_param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                      layers_per_stage) -> Any:
+    """Per-stage spec pytrees for capacity-sized layer slices.
+
+    Stage s owns ``layers_per_stage[s]`` contiguous layers: its stacked
+    leaves have that leading dim but the same core shapes, and the
+    stacked-leaf spec puts None on the leading dim — so the per-stage
+    specs are identical across every stage plan (params never shard
+    over "pipe"). That invariance is what makes a checkpoint saved
+    under one stage partition restore into another resharding-free and
+    bit-exactly. Computed honestly through fit_spec on the sliced
+    shapes rather than asserted.
+    """
+    def sliced(n):
+        def f(path, leaf):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            if _STACKED.match(key):
+                return jax.ShapeDtypeStruct(
+                    (int(n),) + tuple(leaf.shape[1:]),
+                    getattr(leaf, "dtype", jnp.float32))
+            return leaf
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+            params_shape)
+        return jax.tree_util.tree_unflatten(
+            treedef, [f(p, l) for p, l in paths_leaves])
+
+    return [param_specs(cfg, sliced(n), mesh) for n in layers_per_stage]
+
+
 def batch_specs(cfg: ModelConfig, mesh: Mesh, global_rows: int,
                 stub: Optional[bool] = None) -> Dict[str, P]:
     """Specs for the packed train batch {"inputs","labels","weights"}."""

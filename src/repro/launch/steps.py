@@ -32,9 +32,22 @@ collective, and the flat-view optimizer update
 (optim/adam.py::apply_update_flat) for bucket k is applied the moment
 its reduced payload lands — the optimizer moments then live packed as
 one (num_buckets, bucket_elems) array in TrainState, replicated over
-the reduction axes. Global-norm clipping / LAMB keep the pipelined
-exchange but update behind a barrier (their statistics need every
-bucket).
+the reduction axes. In the backward-overlap flush pipeline LAMB
+streams too: its moment updates and per-leaf norm partials land per
+bucket, with only the trust-ratio application deferred to one trailing
+elementwise pass (optim/lamb.py; the after-backward bucket engine
+keeps LAMB's whole-stack barrier — see the rationale there).
+Global-norm clipping keeps the pipelined exchange but updates behind a
+barrier (the clip factor needs every bucket before the first moment
+update).
+
+``HetConfig.pipeline_stages > 1`` adds the pipe dimension: the uniform
+layer stack is cut into contiguous capacity-sized stages
+(core/pipeline.py StagePlan) and the accumulation microbatches stream
+through them in 1F1B program order — per-stage VJP segments exchanged
+through send/recv regions, grads reduced per-stage through the bucket
+engine when ``grad_reduction="bucketed_allreduce"``
+(_build_pipeline_step).
 
 ``input_specs`` provides ShapeDtypeStruct stand-ins for every cell of
 the (architecture x shape) grid — the dry-run lowers against these, no
@@ -56,6 +69,7 @@ from repro.configs.base import (ModelConfig, OptimizerConfig, ShapeConfig,
                                 TrainConfig)
 from repro.core import accumulate as acc
 from repro.core import buckets as bkt
+from repro.core import pipeline as pipe
 from repro.core import weighting
 from repro.launch import sharding as shr
 from repro.launch.mesh import dp_axes as mesh_dp_axes, dp_size, tp_axis
@@ -137,7 +151,13 @@ def validate_train_config(model: Model, tcfg: TrainConfig,
         raise ValueError(
             "grad_reduction='bucketed_allreduce' needs a mesh with "
             f"data-parallel axes; got {mesh.axis_names}")
-    if het.overlap == "backward" and _reduce_axes(tcfg, mesh):
+    if het.overlap == "backward":
+        # model rules checked UNCONDITIONALLY: a mesh with no reduction
+        # axes falls back to the non-overlap schedule, but an
+        # unsupported stack plan used to ride that fallback silently and
+        # then blow up the moment the same config met a real mesh —
+        # supports_staged_backward drives a loud build-time error either
+        # way (tests/test_overlap.py regression)
         if not tr.supports_staged_backward(model.cfg):
             raise ValueError(
                 "HetConfig.overlap='backward' stages the backward over "
@@ -152,6 +172,32 @@ def validate_train_config(model: Model, tcfg: TrainConfig,
                 "is an unrolled program, and bit-exactness with the "
                 "monolithic path requires the monolithic stack "
                 "unrolled too (launch/train.py: --no-scan-layers)")
+    if het.pipeline_stages > 1:
+        if not tr.supports_staged_backward(model.cfg):
+            raise ValueError(
+                "HetConfig.pipeline_stages > 1 cuts the uniform block "
+                "stack (dense | moe | mla) into contiguous stages; "
+                f"stack plan '{tr.stack_plan(model.cfg)}' of "
+                f"'{model.cfg.name}' is not supported")
+        if model.cfg.scan_layers:
+            raise ValueError(
+                "HetConfig.pipeline_stages > 1 needs ModelConfig."
+                "scan_layers=False: the per-stage VJP segments are an "
+                "unrolled program, and bit-exactness with pure DP "
+                "requires the monolithic stack unrolled too "
+                "(launch/train.py: --no-scan-layers)")
+        if model.cfg.num_layers < het.pipeline_stages:
+            raise ValueError(
+                f"pipeline_stages={het.pipeline_stages} exceeds the "
+                f"{model.cfg.num_layers}-layer stack of "
+                f"'{model.cfg.name}' (every stage needs >= 1 layer)")
+        if "pipe" in mesh.axis_names \
+                and mesh.shape["pipe"] != het.pipeline_stages:
+            raise ValueError(
+                f"mesh 'pipe' axis has size {mesh.shape['pipe']} but "
+                f"HetConfig.pipeline_stages={het.pipeline_stages} — "
+                "build the mesh with pipe=pipeline_stages "
+                "(launch/mesh.py)")
 
 
 def _flat_barrier_update(pb, red, m, v, lr_step, ocfg, lr, *, inv_w,
@@ -160,7 +206,10 @@ def _flat_barrier_update(pb, red, m, v, lr_step, ocfg, lr, *, inv_w,
 
     Shared by the after-backward ("buckets") and backward-overlap
     pipelines for configs whose statistics need every reduced bucket
-    (global-norm clipping, LAMB trust ratios). Returns
+    BEFORE the first moment update (global-norm clipping), and by the
+    after-backward engine for ALL of LAMB (the backward-overlap flush
+    pipeline streams LAMB instead — optim/lamb.py has the full
+    exactness rationale). Returns
     (new_pb, new_m, new_v, gnorm, mean trust ratio).
     """
     gsc = red * inv_w
@@ -186,6 +235,26 @@ def _reduce_axes(tcfg: TrainConfig, mesh: Mesh) -> Tuple[str, ...]:
     if tcfg.het.grad_reduction == "bucketed_allreduce":
         return mesh_dp_axes(mesh)
     return ("pod",) if "pod" in mesh.axis_names else ()
+
+
+def stage_plan_for(model: Model,
+                   tcfg: TrainConfig) -> Optional[pipe.StagePlan]:
+    """The pipeline StagePlan for this config cell (None when off).
+
+    When ``HetConfig.capacities`` has exactly ``pipeline_stages``
+    positive entries they double as the per-stage speed scores — the
+    same weight table the DP batch planner uses sizes the layer cut
+    (core/pipeline.py). Anything else (empty / per-DP-rank-shaped /
+    containing zeros, which mark dead DP ranks but cannot mark a
+    pipeline stage) gets the uniform cut.
+    """
+    S = tcfg.het.pipeline_stages
+    if S <= 1:
+        return None
+    caps = tcfg.het.capacities
+    if len(caps) == S and all(c > 0 for c in caps):
+        return pipe.plan_stages(model.cfg.num_layers, caps)
+    return pipe.uniform_stages(model.cfg.num_layers, S)
 
 
 def bucket_layout(model: Model, tcfg: TrainConfig,
@@ -231,7 +300,18 @@ def checkpoint_format(model: Model, tcfg: TrainConfig, mesh: Mesh) -> Dict:
                            # which HetConfig.overlap mode wrote this
                            # checkpoint — restore logs (never silently
                            # adapts) when the restore target differs
-                           "overlap": tcfg.het.overlap}
+                           "overlap": tcfg.het.overlap,
+                           # stage partition that wrote this checkpoint
+                           # (core/pipeline.py stage_record, or None
+                           # without pipelining). Params are stored
+                           # per-leaf, so a checkpoint restores
+                           # bit-exactly under ANY stage plan — the
+                           # record exists so restore can LOG the plan
+                           # change, and repack.py can validate it
+                           "pipeline": None}
+    splan = stage_plan_for(model, tcfg)
+    if splan is not None:
+        fmt["pipeline"] = pipe.stage_record(splan)
     if _overlap_enabled(tcfg, mesh):
         lo = bucket_layout(model, tcfg, mesh)
         params_shape = jax.eval_shape(model.init_params,
@@ -567,8 +647,11 @@ def _build_backward_overlap_step(model: Model, tcfg: TrainConfig,
     monolithic path (same config, ``overlap="none"``) — per-bucket
     exchanges match the monolithic exchange slice-for-slice and the
     flat AdamW stream matches the tree update (tests/test_overlap.py).
-    Global-norm clip and LAMB keep the in-backward pipelined exchange
-    but apply the flat update behind a barrier. Gradient accumulation
+    LAMB streams its moment updates and norm partials per bucket with
+    one trailing trust pass (optim/lamb.py — bitwise-equal to the
+    barrier form by construction); global-norm clip keeps the
+    in-backward pipelined exchange but applies the flat update behind
+    a barrier. Gradient accumulation
     stages every microbatch's backward and flushes only during the
     last one (the bucket is final only then); the accumulator is the
     fp32 stream buffer, so bf16-carry configs differ from the
@@ -794,12 +877,25 @@ def _build_backward_overlap_step(model: Model, tcfg: TrainConfig,
 
         cell: Dict[str, Any] = {}
         if fused_stream:
-            def hook(ssq, red_k, k):
-                g_k = red_k * cell["inv_w"]
-                out = adam.apply_update_flat(
-                    pb[k], g_k, state.opt.m[k], state.opt.v[k],
-                    lr_step, ocfg, lr, decay_mask=dmask[k])
-                return ssq + jnp.sum(g_k * g_k), out
+            if ocfg.name == "lamb":
+                # stream moments + per-leaf norm partials per bucket;
+                # the trust-scaled step itself trails (finish below)
+                def hook(ssq, red_k, k):
+                    g_k = red_k * cell["inv_w"]
+                    pf, upd, mf, vf = adam.flat_adamw_terms(
+                        pb[k], g_k, state.opt.m[k], state.opt.v[k],
+                        lr_step, ocfg, decay_mask=dmask[k])
+                    psq, usq = lamb.bucket_norm_terms(
+                        pf, upd, segs[k], n_leaves)
+                    return (ssq + jnp.sum(g_k * g_k),
+                            (pf, upd, mf, vf, psq, usq))
+            else:
+                def hook(ssq, red_k, k):
+                    g_k = red_k * cell["inv_w"]
+                    out = adam.apply_update_flat(
+                        pb[k], g_k, state.opt.m[k], state.opt.v[k],
+                        lr_step, ocfg, lr, decay_mask=dmask[k])
+                    return ssq + jnp.sum(g_k * g_k), out
 
             pipeline = bkt.BucketFlushPipeline(
                 readiness, prep, exchange, bucket_fn=hook,
@@ -836,7 +932,25 @@ def _build_backward_overlap_step(model: Model, tcfg: TrainConfig,
 
         outs, errs, fc = pipeline.finish()
         o, w = jnp.sum(cell["o"]), cell["w_glob"]
-        if fused_stream:
+        if fused_stream and ocfg.name == "lamb":
+            # finish() hands outs back in BUCKET-INDEX order whatever
+            # order the buckets flushed in — so the partial-norm
+            # combination below is the canonical one apply_update_flat
+            # uses, and the streamed step is bitwise the barrier step
+            pf = jnp.stack([row[0] for row in outs])
+            upd = jnp.stack([row[1] for row in outs])
+            trust_v = lamb.trust_from_norms(
+                lamb.combine_norm_terms([row[4] for row in outs]),
+                lamb.combine_norm_terms([row[5] for row in outs]))
+            new_pb = lamb.apply_trust(
+                pf, upd, lr, segs, trust_v).astype(pb.dtype)
+            new_m = jnp.stack(
+                [row[2] for row in outs]).astype(state.opt.m.dtype)
+            new_v = jnp.stack(
+                [row[3] for row in outs]).astype(state.opt.v.dtype)
+            gnorm = jnp.sqrt(fc)
+            trust = jnp.mean(trust_v[:n_leaves])
+        elif fused_stream:
             new_pb = jnp.stack([row[0] for row in outs])
             new_m = jnp.stack([row[1] for row in outs])
             new_v = jnp.stack([row[2] for row in outs])
@@ -862,6 +976,467 @@ def _build_backward_overlap_step(model: Model, tcfg: TrainConfig,
             opt=adam.AdamState(step=lr_step, m=new_m, v=new_v),
             err=new_err)
         return new_state, metrics
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# pipeline-parallel step (HetConfig.pipeline_stages > 1)
+# --------------------------------------------------------------------------
+
+
+def _pipe_send(x: jnp.ndarray, mesh: Mesh, spec: P,
+               direction: int) -> jnp.ndarray:
+    """Move a stage-boundary value to the next (+1) / previous (-1)
+    stage along the "pipe" axis.
+
+    Every stage executes the full program in program order on
+    pipe-replicated values, so the ring ppermute is value-preserving —
+    it exists to hand the runtime the placement edge between
+    consecutive stages (the activation / cotangent hop the modeled
+    timeline charges to DCN). On the compat stack (no native manual
+    collectives — old jaxlib check-fails ppermute around the staged
+    VJPs) the hop degrades to a sharding constraint; without a pipe
+    axis on the mesh it is the identity.
+    """
+    if "pipe" not in mesh.axis_names:
+        return x
+    if not compat.NATIVE_MANUAL_COLLECTIVES:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    n = mesh.shape["pipe"]
+    perm = [(i, (i + direction) % n) for i in range(n)]
+    return compat.shard_map(
+        lambda v: jax.lax.ppermute(v, "pipe", perm),
+        mesh=mesh, in_specs=spec, out_specs=spec,
+        axis_names={"pipe"}, check_vma=False)(x)
+
+
+def _pipeline_leaf_pieces(params_shape: Any, cfg: ModelConfig,
+                          splan: pipe.StagePlan):
+    """Per-leaf ``(offset_within_leaf, n, flush_stage)`` pieces for the
+    pipeline's bucket engine (cf. ``_staged_leaf_pieces``).
+
+    Flush stages follow the LAST microbatch's backward completion
+    order: the head lands first (flush stage 0), layer ``l`` at the B
+    event of its pipeline stage (flush stage ``S - 1 -
+    stage_of_layer(l)``), the embedding table last (flush stage ``S`` —
+    a tied table also receives a head-stage contribution, so its grad
+    is only final at the end). Feeds
+    ``core/buckets.py::bucket_readiness``.
+    """
+    from repro.models import transformer as tr
+
+    L = cfg.num_layers
+    S = splan.num_stages
+    head_keys = set(tr.head_param_keys(cfg))
+    pieces = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            params_shape)[0]:
+        n = int(math.prod(leaf.shape)) if leaf.shape else 1
+        top = _path_top(path[0])
+        if top == "layers":
+            if n % L:
+                raise ValueError(
+                    f"stacked leaf {jax.tree_util.keystr(path)} of "
+                    f"{n} elements does not split into {L} layers")
+            per = n // L
+            pieces.append([(l * per, per,
+                            S - 1 - splan.stage_of_layer(l))
+                           for l in range(L)])
+        elif top == "embed":
+            pieces.append([(0, n, S)])
+        elif top in head_keys:
+            pieces.append([(0, n, 0)])
+        else:
+            raise ValueError(
+                f"pipeline_stages > 1: unexpected param subtree "
+                f"'{top}' (uniform stack expects embed / final_norm / "
+                f"lm_head / layers)")
+    return pieces
+
+
+def _build_pipeline_step(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
+                         splan: pipe.StagePlan,
+                         layout: Optional[bkt.BucketLayout]):
+    """The pipelined train step: capacity-sized contiguous stages, the
+    accumulation microbatches streamed through them in 1F1B (or GPipe)
+    program order.
+
+    The step emits one deterministic global sequence of per-stage VJP
+    segments (core/pipeline.py::program_order): each F event runs one
+    stage's forward slice and hands the boundary activation to the next
+    stage through a ``_pipe_send`` region; each B event runs the
+    stage's VJP, scatter-adds the stage-slice gradients into the
+    accumulator, and sends the input cotangent back. Because every
+    stage's B events occur in microbatch order and stage slices are
+    disjoint, the per-element gradient accumulation reproduces
+    ``accumulate.unrolled_accumulate``'s add order — fp32 with
+    ``scan_layers=False`` is bit-identical to pure DP of the same
+    config (``pipeline_stages=1``), whatever the stage partition
+    (BENCH_pipeline.json invariant).
+
+    Reduction: with ``grad_reduction="allreduce"`` (``layout`` None)
+    XLA reduces from the shardings exactly as the monolithic path;
+    with ``"bucketed_allreduce"`` the grads live in the flat (ranks,
+    padded_total) stream and each stage's buckets flush through their
+    own small exchange regions the moment the last microbatch's B event
+    for that stage lands (readiness from ``_pipeline_leaf_pieces``) —
+    per-stage reduction overlapping the remaining drain, mirroring
+    ``overlap="backward"``'s engine. The tree-form optimizer runs after
+    the drain (``overlap`` must be "none" with pipelining —
+    HetConfig.validate), so moments stay a pytree and checkpoints
+    restore bit-exactly across stage plans, including pure DP.
+
+    Exactness on the bucketed path: losses are bit-identical to the
+    stages=1 bucketed step, but parameters can drift by 1-2 ulp — XLA
+    fuses the attention backward differently once the program is cut at
+    a stage boundary (verified: the drift appears for ANY vjp cut
+    between layers, including the per-layer granularity, and sits in
+    the softmax-backward reduction feeding dq/dk/dv). A documented
+    trade like backward-overlap's bf16 carry; the allreduce path above
+    carries the bit-exactness claim (BENCH_pipeline.json).
+    """
+    from repro.models import transformer as tr
+
+    cfg = model.cfg
+    ocfg = tcfg.optimizer
+    M = max(1, tcfg.het.accum_steps)
+    S = splan.num_stages
+    ranges = splan.stage_ranges()
+    events = pipe.program_order(S, M, schedule=tcfg.het.pipeline_schedule)
+    dp = mesh_dp_axes(mesh)
+    n_dp = dp_size(mesh)
+    token_frontend = cfg.frontend == "token"
+    L = cfg.num_layers
+
+    def carry_dtype(p):
+        # same bf16 passthrough as compute_grads' accumulation carry
+        return p.dtype if p.dtype == jnp.bfloat16 else jnp.float32
+
+    if layout is None:
+        # ---- plain-SPMD path (grad_reduction="allreduce") ------------
+        ctx = make_parallel_ctx(mesh)
+        seg = tr.pipeline_stage_fns(cfg, ctx, ranges,
+                                    label_smoothing=tcfg.label_smoothing)
+        embed_fn, head_fn = seg["embed_fn"], seg["head_fn"]
+        head_keys, stage_fwd = seg["head_keys"], seg["stage_fwd"]
+        act_spec = shr.stage_activation_spec(
+            mesh, tcfg.shape.global_batch // M)
+
+        def step(state: TrainState, batch: Dict
+                 ) -> Tuple[TrainState, Dict]:
+            lr_step = state.opt.step + 1
+            lr = schedules.learning_rate(ocfg, lr_step)
+            params = state.params
+            split = acc.split_microbatches(batch, M, num_ranks=n_dp)
+            mbs = [jax.tree.map(lambda a: a[i], split) for i in range(M)]
+            slices = [jax.tree.map(lambda a: a[r0:r1], params["layers"])
+                      for (r0, r1) in ranges]
+            emb_p = {"embed": params["embed"]} if token_frontend else {}
+            hp = {k: params[k] for k in head_keys}
+            g_acc = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, carry_dtype(p)), params)
+            o_acc = jnp.zeros((), jnp.float32)
+            w_acc = jnp.zeros((), jnp.float32)
+            x_in: Dict = {}
+            vjps: Dict = {}
+            head_vjps: Dict = {}
+            embed_vjps: Dict = {}
+            cots: Dict = {}
+            w_sgs: Dict = {}
+            head_emb: Dict = {}
+            for (s, kind, m) in events:
+                mb = mbs[m]
+                if kind == pipe.FWD:
+                    if s == 0:
+                        if token_frontend:
+                            x0, evjp = jax.vjp(
+                                lambda q: embed_fn(q, mb["inputs"]),
+                                emb_p)
+                            embed_vjps[m] = evjp
+                        else:
+                            x0 = embed_fn(emb_p, mb["inputs"])
+                        xa = (x0, jnp.zeros((), jnp.float32))
+                    else:
+                        xa = x_in.pop((s, m))
+                    positions = jnp.arange(xa[0].shape[-2])
+                    (x_out, a_out), vjp = jax.vjp(
+                        lambda q, xx, aa: stage_fwd[s](q, xx, aa,
+                                                       positions),
+                        slices[s], xa[0], xa[1])
+                    vjps[(s, m)] = vjp
+                    if s < S - 1:
+                        x_in[(s + 1, m)] = (
+                            _pipe_send(x_out, mesh, act_spec, +1),
+                            a_out)
+                    else:
+                        (ce, w), hvjp = jax.vjp(
+                            lambda q, xx: head_fn(q, xx, mb["labels"],
+                                                  mb["weights"]),
+                            hp, x_out)
+                        w_sg = jax.lax.stop_gradient(w)
+                        o_acc = o_acc + (ce + a_out * w_sg)
+                        w_acc = w_acc + w
+                        head_vjps[m] = hvjp
+                        w_sgs[m] = w_sg
+                else:
+                    if s == S - 1:
+                        g_hp, x_cot = head_vjps.pop(m)(
+                            (jnp.ones((), jnp.float32),
+                             jnp.zeros((), jnp.float32)))
+                        for key in head_keys:
+                            if key == "embed":
+                                # tied table: held until the stage-0 B
+                                # event and combined with the gather
+                                # cotangent there — ONE add per
+                                # microbatch, the monolithic VJP's
+                                # association
+                                head_emb[m] = g_hp["embed"]
+                                continue
+                            g_acc[key] = jax.tree.map(
+                                lambda a, b: a + b.astype(a.dtype),
+                                g_acc[key], g_hp[key])
+                        cot = (x_cot, w_sgs[m])
+                    else:
+                        cot = cots.pop((s, m))
+                    g_sl, x_cot, a_cot = vjps.pop((s, m))(cot)
+                    r0 = ranges[s][0]
+                    g_acc["layers"] = jax.tree.map(
+                        lambda a, g: a.at[r0:r0 + g.shape[0]].add(
+                            g.astype(a.dtype)),
+                        g_acc["layers"], g_sl)
+                    if s > 0:
+                        cots[(s - 1, m)] = (
+                            _pipe_send(x_cot, mesh, act_spec, -1),
+                            a_cot)
+                    elif token_frontend:
+                        g_emb = embed_vjps.pop(m)(x_cot)[0]["embed"]
+                        if m in head_emb:
+                            g_emb = g_emb + head_emb.pop(m)
+                        g_acc["embed"] = g_acc["embed"] + \
+                            g_emb.astype(g_acc["embed"].dtype)
+            loss = weighting.finalize(o_acc, w_acc)
+            grads = weighting.scale_grads(g_acc, w_acc)
+            opt_apply = (lamb.apply_update if ocfg.name == "lamb"
+                         else adam.apply_update)
+            new_params, opt, met = opt_apply(params, grads, state.opt,
+                                             ocfg, lr)
+            metrics = {"loss": loss, "weight": w_acc, **met}
+            return TrainState(params=new_params, opt=opt,
+                              err=state.err), metrics
+
+        return step
+
+    # ---- bucketed path (grad_reduction="bucketed_allreduce") ---------
+    # rank-major vmapped stage VJPs with the flat f32 gradient stream;
+    # per-stage bucket flushes through small manual exchange regions
+    # (cf. _build_backward_overlap_step — same engine, pipeline order)
+    inner_ctx = ParallelCtx(mesh=mesh, dp_axes=(), tp_axis=tp_axis(mesh))
+    seg = tr.pipeline_stage_fns(cfg, inner_ctx, ranges,
+                                label_smoothing=tcfg.label_smoothing)
+    embed_fn, head_fn = seg["embed_fn"], seg["head_fn"]
+    head_keys, stage_fwd = seg["head_keys"], seg["stage_fwd"]
+    ranks = n_dp
+    red_axis: Any = dp if len(dp) > 1 else dp[0]
+    axis_set = set(dp)
+    rank_spec = P(dp)
+    buf_spec = P(dp if len(dp) > 1 else dp[0])
+    be = layout.bucket_elems
+    shard = be // ranks
+    q_impl = tcfg.het.quantize_impl
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    readiness = bkt.bucket_readiness(
+        layout, _pipeline_leaf_pieces(params_shape, cfg, splan))
+    subtree_slots: Dict[str, list] = {}
+    for (path, _), off, size in zip(
+            jax.tree_util.tree_flatten_with_path(params_shape)[0],
+            layout.offsets, layout.sizes):
+        subtree_slots.setdefault(_path_top(path[0]), []).append(
+            (off, size))
+
+    def scatter_subtree(buf, top, grads, layers=None):
+        """Scatter-add a landed grad subtree into the stream buffer
+        (stage slices index a contiguous per-layer region)."""
+        leaves = jax.tree.leaves(grads)
+        slots = subtree_slots.get(top, [])
+        assert len(leaves) == len(slots), (top, len(leaves), len(slots))
+        for g, (off, size) in zip(leaves, slots):
+            if layers is not None:
+                r0, r1 = layers
+                per = size // L
+                off, size = off + r0 * per, (r1 - r0) * per
+            buf = buf.at[:, off:off + size].add(
+                g.reshape(ranks, size).astype(jnp.float32))
+        return buf
+
+    def split_rank_microbatches(sb):
+        """Per-rank accumulation split (inner_dp == 1 counterpart of
+        the backward-overlap splitter — rows per rank cut into M equal
+        contiguous microbatch slices)."""
+        if M == 1:
+            return [sb]
+
+        def split(a):
+            b = a.shape[1]
+            if b % M:
+                raise ValueError(
+                    f"rows {b} per reduction rank not divisible by "
+                    f"accum {M}")
+            return a.reshape(ranks, M, b // M, *a.shape[2:])
+
+        s = {k: split(v) for k, v in sb.items()}
+        return [jax.tree.map(lambda a: a[:, i], s) for i in range(M)]
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        lr_step = state.opt.step + 1
+        lr = schedules.learning_rate(ocfg, lr_step)
+        params = state.params
+        sb = jax.tree.map(
+            lambda v: jax.lax.with_sharding_constraint(
+                v.reshape(ranks, v.shape[0] // ranks, *v.shape[1:]),
+                rank_spec), batch)
+        mbs = split_rank_microbatches(sb)
+        slices = [jax.tree.map(lambda a: a[r0:r1], params["layers"])
+                  for (r0, r1) in ranges]
+        emb_p = {"embed": params["embed"]} if token_frontend else {}
+        hp = {k: params[k] for k in head_keys}
+
+        def prep(k, raw_k):
+            return raw_k.reshape(ranks, ranks, shard), None
+
+        def exchange(k, prepared):
+            payload, _ = prepared
+
+            def region(pl):
+                onehot = compat.manual_axis_onehot(red_axis, ranks,
+                                                   tie=pl)
+                red, _ = bkt.exchange_prepared_bucket(
+                    pl[0], None, axis=red_axis, axis_size=ranks,
+                    compress=False, block_size=_BLOCK, impl=q_impl,
+                    interpret=False, onehot=onehot)
+                return red
+
+            red = compat.shard_map(
+                region, mesh=mesh, in_specs=buf_spec, out_specs=P(),
+                axis_names=axis_set, check_vma=False)(payload)
+            return red, None
+
+        pipeline_fl = bkt.BucketFlushPipeline(readiness, prep, exchange)
+
+        def flush(stage, buf):
+            pipeline_fl.flush_ready_buckets(
+                stage, lambda k: buf[:, k * be:(k + 1) * be])
+
+        buf = jax.lax.with_sharding_constraint(
+            jnp.zeros((ranks, layout.padded_total), jnp.float32),
+            buf_spec)
+        o_acc = jnp.zeros((ranks,), jnp.float32)
+        w_acc = jnp.zeros((ranks,), jnp.float32)
+        x_in: Dict = {}
+        stage_in: Dict = {}
+        head_in: Dict = {}
+        cots: Dict = {}
+        w_sgs: Dict = {}
+        head_emb: Dict = {}
+        for (s, kind, m) in events:
+            mb = mbs[m]
+            if kind == pipe.FWD:
+                if s == 0:
+                    x0 = jax.vmap(embed_fn, in_axes=(None, 0))(
+                        emb_p, mb["inputs"])
+                    xa = (x0, jnp.zeros((ranks,), jnp.float32))
+                else:
+                    xa = x_in.pop((s, m))
+                stage_in[(s, m)] = xa
+                positions = jnp.arange(xa[0].shape[-2])
+                x_out, a_out = jax.vmap(
+                    lambda sl_, x_, a_: stage_fwd[s](sl_, x_, a_,
+                                                     positions),
+                    in_axes=(None, 0, 0))(slices[s], *xa)
+                if s < S - 1:
+                    x_in[(s + 1, m)] = (
+                        _pipe_send(x_out, mesh, rank_spec, +1), a_out)
+                else:
+                    ce, w = jax.vmap(
+                        head_fn, in_axes=(None, 0, 0, 0))(
+                        hp, x_out, mb["labels"], mb["weights"])
+                    w_sg = jax.lax.stop_gradient(w)
+                    o_acc = o_acc + (ce + a_out * w_sg)
+                    w_acc = w_acc + w
+                    head_in[m] = x_out
+                    w_sgs[m] = w_sg
+            else:
+                if s == S - 1:
+                    def head_stage(hp_, x_l, lab, wt):
+                        _, vjp = jax.vjp(
+                            lambda q, xx: head_fn(q, xx, lab, wt),
+                            hp_, x_l)
+                        return vjp((jnp.ones((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)))
+
+                    g_hp, x_cot = jax.vmap(
+                        head_stage, in_axes=(None, 0, 0, 0))(
+                        hp, head_in.pop(m), mb["labels"],
+                        mb["weights"])
+                    for key in head_keys:
+                        if key == "embed":
+                            # tied table: one add per microbatch at the
+                            # stage-0 B event (see the allreduce path)
+                            head_emb[m] = g_hp["embed"]
+                            continue
+                        buf = scatter_subtree(buf, key, g_hp[key])
+                    cot = (x_cot, w_sgs[m])
+                else:
+                    cot = cots.pop((s, m))
+                xa = stage_in.pop((s, m))
+                positions = jnp.arange(xa[0].shape[-2])
+
+                def stage_bwd(sl_, x_, a_, xc, ac):
+                    _, vjp = jax.vjp(
+                        lambda q, xx, aa: stage_fwd[s](q, xx, aa,
+                                                       positions),
+                        sl_, x_, a_)
+                    return vjp((xc, ac))
+
+                g_sl, x_cot, a_cot = jax.vmap(
+                    stage_bwd, in_axes=(None, 0, 0, 0, 0))(
+                    slices[s], xa[0], xa[1], cot[0], cot[1])
+                buf = scatter_subtree(buf, "layers", g_sl,
+                                      layers=ranges[s])
+                if m == M - 1:
+                    flush(S - 1 - s, buf)
+                if s > 0:
+                    cots[(s - 1, m)] = (
+                        _pipe_send(x_cot, mesh, rank_spec, -1), a_cot)
+                else:
+                    if token_frontend:
+                        def embed_stage(ep, i, xc):
+                            _, vjp = jax.vjp(
+                                lambda q: embed_fn(q, i), ep)
+                            return vjp(xc)[0]
+
+                        g_emb = jax.vmap(
+                            embed_stage, in_axes=(None, 0, 0))(
+                            emb_p, mb["inputs"], x_cot)["embed"]
+                        if m in head_emb:
+                            g_emb = g_emb + head_emb.pop(m)
+                        buf = scatter_subtree(buf, "embed", g_emb)
+                    if m == M - 1:
+                        flush(S, buf)
+        outs, _, _ = pipeline_fl.finish()
+        red = jnp.stack(outs)
+        grads = bkt.unpack_buckets(red, layout)
+        o, w = jnp.sum(o_acc), jnp.sum(w_acc)
+        loss = weighting.finalize(o, w)
+        grads = weighting.scale_grads(grads, w)
+        opt_apply = (lamb.apply_update if ocfg.name == "lamb"
+                     else adam.apply_update)
+        new_params, opt, met = opt_apply(params, grads, state.opt,
+                                         ocfg, lr)
+        metrics = {"loss": loss, "weight": w, **met}
+        return TrainState(params=new_params, opt=opt,
+                          err=state.err), metrics
 
     return step
 
@@ -896,12 +1471,31 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
     if overlap and layout is None:
         raise ValueError("HetConfig.overlap='buckets' needs a bucket "
                          "layout (bucket_mb > 0 and reduction axes)")
-    # the fused per-bucket pipeline can stream the AdamW update as each
-    # bucket lands; global-norm clipping and LAMB's per-layer trust
-    # ratios need every bucket first, so those keep the pipelined
-    # exchange but update behind a barrier
-    fused_stream = (overlap and ocfg.grad_clip <= 0
-                    and ocfg.name != "lamb")
+    # the fused per-bucket pipeline can stream the optimizer as each
+    # bucket lands — AdamW entirely, LAMB up to one trailing
+    # trust-ratio pass (optim/lamb.py); global-norm clipping needs
+    # every bucket BEFORE the first moment update, so it keeps the
+    # pipelined exchange but updates behind a barrier
+    fused_stream = overlap and ocfg.grad_clip <= 0
+
+    if tcfg.het.pipeline_stages > 1:
+        # capacity-sized pipeline stages with 1F1B microbatching.
+        # HetConfig.validate pinned overlap="none" and reduction to
+        # allreduce / bucketed_allreduce, so `layout` is exactly the
+        # bucket grid for the per-stage flushes (or None for plain
+        # allreduce) and the optimizer state stays a pytree
+        splan = stage_plan_for(model, tcfg)
+        pipe_step = _build_pipeline_step(model, tcfg, mesh, splan=splan,
+                                         layout=layout)
+        specs = state_specs(model, tcfg, mesh)
+        bspecs = shr.batch_specs(cfg, mesh, tcfg.shape.global_batch)
+        return jax.jit(
+            pipe_step,
+            in_shardings=(shr.named(mesh, specs),
+                          shr.named(mesh, bspecs)),
+            out_shardings=(shr.named(mesh, specs), None),
+            donate_argnums=(0,),
+        )
 
     if overlap and tcfg.het.overlap == "backward":
         # staged layer-by-layer backward with in-backprop bucket
@@ -1019,7 +1613,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
             kwargs = dict(axis=red_axis, axis_size=red_size,
                           compress=(compress != "none"),
                           block_size=_BLOCK, impl=q_impl)
-            if fused_stream:
+            if fused_stream and ocfg.name != "lamb":
                 def hook(ssq, red_k, xs_k, k):
                     p_k, m_k, v_k, dm_k = xs_k
                     g_k = red_k * inv_w
@@ -1036,6 +1630,18 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
                 gnorm = jnp.sqrt(ssq)
                 trust = jnp.ones((), jnp.float32)
             else:
+                # clip barrier, and ALL of LAMB in this after-backward
+                # engine: fusing LAMB's hook into the per-bucket scan
+                # deterministically perturbs how XLA compiles the
+                # whole-module gradient/reduction program (~0.4% of
+                # reduced-grad elements move 1 ulp, measured across
+                # every hook/optimization_barrier variant), which
+                # breaks the backward==buckets bitwise contract
+                # (tests/test_overlap.py). The backward-overlap flush
+                # pipeline streams LAMB bitwise-safely; here the
+                # barrier form is the bit-exact choice — and the
+                # exchange is already fully overlapped bucket-to-
+                # bucket, so only the optimizer pass trails.
                 red, new_e, _ = bkt.exchange_buckets_overlapped(
                     gb, e, **kwargs)
                 new_pb, new_m, new_v, gnorm, trust = \

@@ -94,7 +94,9 @@ def build_everything(args):
             bucket_mb=args.bucket_mb,
             overlap=args.overlap,
             accum_steps=args.accum,
-            replan_interval=args.replan_interval),
+            replan_interval=args.replan_interval,
+            pipeline_stages=args.pipeline_stages,
+            pipeline_schedule=args.pipeline_schedule),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   warmup_steps=args.warmup,
                                   total_steps=args.steps,
@@ -198,7 +200,8 @@ def train(args) -> Dict[str, float]:
               f"compression={tcfg.het.compression} "
               f"accum={tcfg.het.accum_steps} "
               f"optimizer={tcfg.optimizer.name} "
-              f"scan_layers={cfg.scan_layers}")
+              f"scan_layers={cfg.scan_layers} "
+              f"pipeline_stages={tcfg.het.pipeline_stages}")
         return {"steps": 0, "wall_s": 0.0}
 
     corpus = build_synthetic_corpus(
@@ -242,6 +245,18 @@ def train(args) -> Dict[str, float]:
                 f"(rows {plan.rows_per_rank.tolist()}, global "
                 f"{plan.global_rows}) consume different global record "
                 f"streams")
+        saved_pipe = (meta.get("format") or {}).get("pipeline")
+        cur_pipe = fmt.get("pipeline")
+        if saved_pipe != cur_pipe:
+            def _pdesc(rec):
+                if not rec:
+                    return "none"
+                return (f"stages={len(rec['plan']['rows_per_rank'])} "
+                        f"layers={rec['plan']['rows_per_rank']}")
+            # params are stored per-leaf, so the restore itself is
+            # bit-exact under any stage plan — log, never adapt
+            print(f"[train] restore: pipeline stage plan changed: "
+                  f"{_pdesc(saved_pipe)} -> {_pdesc(cur_pipe)}")
         specs = steps_mod.state_specs(model, tcfg, mesh)
         with compat.set_mesh(mesh):
             state = jax.device_put(host, named(mesh, specs))
@@ -485,7 +500,21 @@ def main():
                          " --bucket-mb > 0")
     ap.add_argument("--no-scan-layers", action="store_true",
                     help="unroll the layer stack instead of lax.scan "
-                         "(required by --overlap backward; larger HLO)")
+                         "(required by --overlap backward and "
+                         "--pipeline-stages > 1; larger HLO)")
+    ap.add_argument("--pipeline-stages", type=int, default=1,
+                    help="split the layer stack into N contiguous "
+                         "pipeline stages sized by per-pod capacity "
+                         "(core/pipeline.py); needs --no-scan-layers, "
+                         "--overlap none and --accum >= N (the "
+                         "accumulation microbatches are the 1F1B "
+                         "stream). 1 = no pipelining")
+    ap.add_argument("--pipeline-schedule", default="1f1b",
+                    choices=list(cfgbase.PIPELINE_MODES),
+                    help="microbatch schedule for --pipeline-stages > 1:"
+                         " 1f1b (warmup / steady / drain, bounded "
+                         "activation memory) or gpipe (all forwards "
+                         "then all backwards)")
     ap.add_argument("--dry-run", action="store_true",
                     help="build mesh/plan, validate the config, print "
                          "the summary, and exit without training")

@@ -467,6 +467,64 @@ def staged_uniform_segments(cfg: ModelConfig, ctx: ParallelCtx, *,
             "head_fn": head_fn, "head_keys": head_param_keys(cfg)}
 
 
+def pipeline_stage_fns(cfg: ModelConfig, ctx: ParallelCtx,
+                       stage_ranges, *,
+                       label_smoothing: float = 0.0,
+                       ce_impl: str = "reference") -> Dict[str, Any]:
+    """staged_uniform_segments generalized so a segment boundary can be
+    a pipeline cut (core/pipeline.py StagePlan).
+
+    ``stage_ranges``: list of (start, stop) contiguous layer ranges
+    covering [0, num_layers). Returns the staged_uniform_segments dict
+    plus ``stage_fwd``: a list of per-stage VJP-able functions
+
+      stage_fwd[s](layer_slice, x, aux, positions) -> (x', aux')
+
+    where ``layer_slice`` is the params["layers"] pytree sliced to the
+    stage's leading-dim range. Each stage is the same per-layer
+    ``layer_fn`` chain as the monolithic unrolled stack — aux threads
+    through the carry so the cross-stage composition reproduces
+    ``hidden_states``'s add order bit-for-bit. The embedding belongs to
+    stage 0 (run embed_fn before stage_fwd[0]) and the head to the last
+    stage (run head_fn after stage_fwd[-1]) — transformer-side contract
+    for ``launch/steps.py::_build_pipeline_step``.
+    """
+    if stack_plan(cfg) != "uniform":
+        raise ValueError(
+            f"pipeline stages require the uniform stack plan; "
+            f"{cfg.name} uses '{stack_plan(cfg)}'")
+    ranges = [(int(a), int(b)) for a, b in stage_ranges]
+    covered = 0
+    for s, (start, stop) in enumerate(ranges):
+        if start != covered or stop <= start:
+            raise ValueError(
+                f"stage_ranges must tile [0, {cfg.num_layers}) "
+                f"contiguously; stage {s} got [{start}, {stop}) after "
+                f"{covered} covered layers")
+        covered = stop
+    if covered != cfg.num_layers:
+        raise ValueError(
+            f"stage_ranges cover {covered} layers, model has "
+            f"{cfg.num_layers}")
+
+    segs = staged_uniform_segments(
+        cfg, ctx, label_smoothing=label_smoothing, ce_impl=ce_impl)
+    layer_fn = segs["layer_fn"]
+
+    def make_stage(num_layers_s):
+        def stage_fwd(layer_slice, x, aux, positions):
+            for i in range(num_layers_s):
+                lp = jax.tree.map(lambda a: a[i], layer_slice)
+                x, a = layer_fn(lp, x, positions)
+                aux = aux + a
+            return x, aux
+        return stage_fwd
+
+    segs["stage_fwd"] = [make_stage(stop - start) for start, stop in ranges]
+    segs["stage_ranges"] = ranges
+    return segs
+
+
 # --------------------------------------------------------------------------
 # prefill: forward + cache construction
 # --------------------------------------------------------------------------

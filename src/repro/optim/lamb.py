@@ -14,14 +14,31 @@ keeps training stable. Shares Adam's moment state (and dtype policy /
 ZeRO-1 sharding); selectable via OptimizerConfig(name="lamb") everywhere
 Adam is.
 
-Flat-view path (``HetConfig.overlap="buckets"``): ``apply_update_flat``
-runs LAMB on the packed (num_buckets, bucket_elems) bucket stack. The
-trust ratio is PER LAYER, and leaves span bucket boundaries, so —
-unlike AdamW — LAMB cannot stream per-bucket updates as payloads land:
-the per-leaf ||p|| / ||update|| norms are rebuilt over the whole stack
-with segment sums keyed by ``core/buckets.py::segment_ids``. The train
-step therefore always takes the barrier path (pipelined exchange, then
-one flat update) when ``optimizer.name == "lamb"``.
+Flat-view path (``HetConfig.overlap`` in {"buckets", "backward"}):
+``apply_update_flat`` runs LAMB on the packed (num_buckets,
+bucket_elems) bucket stack. The trust ratio is PER LAYER and leaves
+span bucket boundaries, but everything EXCEPT the final trust-scaled
+step is per-element, so the barrier shrinks to one trailing pass: the
+backward-overlap flush pipeline (``overlap="backward"``) streams the
+m/v moment updates and the per-leaf squared-norm partials
+(:func:`bucket_norm_terms`) per bucket as each reduced payload lands
+mid-backprop, and defers only the trust-ratio application to ONE
+trailing elementwise pass (:func:`apply_trust`) after the last bucket.
+Bit-exactness contract: partials are combined across buckets in
+canonical bucket-index order (a fixed python-loop fp reduction —
+:func:`combine_norm_terms`), and ``apply_update_flat`` itself computes
+its norms through the same per-bucket calls in the same order, so the
+streamed hooks and the whole-stack barrier form are bitwise identical
+by construction given the same reduced stack (tests/test_overlap.py).
+The whole-stack barrier form still runs (a) when ``grad_clip > 0`` —
+the clip factor needs every bucket BEFORE the moment update — and
+(b) in the after-backward bucket engine (``overlap="buckets"``):
+fusing LAMB's hook into that engine's per-bucket scan measurably
+perturbs how XLA compiles the whole-module gradient program (~0.4% of
+reduced-grad elements move 1 ulp, stable across every hook variant
+tried), which would break the backward==buckets bitwise contract; its
+exchange is already fully overlapped bucket-to-bucket, so the barrier
+there costs only the trailing optimizer pass.
 """
 from __future__ import annotations
 
@@ -77,6 +94,59 @@ def apply_update(params: Any, grads: Any, state: adam.AdamState,
     return new_p, adam.AdamState(step=step, m=new_m, v=new_v), metrics
 
 
+def bucket_norm_terms(pf: jnp.ndarray, update: jnp.ndarray,
+                      seg_ids: jnp.ndarray, num_leaves: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ONE bucket's per-leaf squared-norm partials.
+
+    ``pf``/``update``/``seg_ids`` are matching (bucket_elems,) slices;
+    returns (p_ssq, u_ssq), each (num_leaves + 1,) — element ``i`` is
+    this bucket's contribution to leaf i's squared ||p|| / ||update||
+    (index ``num_leaves`` collects the zero padding). The streamed
+    overlap hooks emit these as each bucket lands.
+    """
+    sid = seg_ids.reshape(-1)
+    p_ssq = jax.ops.segment_sum(
+        jnp.square(pf.reshape(-1)), sid, num_segments=num_leaves + 1)
+    u_ssq = jax.ops.segment_sum(
+        jnp.square(update.reshape(-1)), sid, num_segments=num_leaves + 1)
+    return p_ssq, u_ssq
+
+
+def combine_norm_terms(rows) -> jnp.ndarray:
+    """Sum per-bucket partials in canonical bucket-index order.
+
+    ``rows``: a (num_buckets, num_leaves + 1) stack or a list of
+    (num_leaves + 1,) rows. A fixed python-loop fp reduction order —
+    NOT jnp.sum, whose reduction tree XLA may reassociate — is the
+    bit-exactness contract between the streamed and whole-stack paths:
+    both combine the identical per-bucket partials in the identical
+    order, whatever order the buckets were flushed in.
+    """
+    rows = list(rows)
+    total = rows[0]
+    for row in rows[1:]:
+        total = total + row
+    return total
+
+
+def trust_from_norms(p_ssq: jnp.ndarray, u_ssq: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Per-leaf trust ratios from combined squared norms (1.0 when
+    degenerate — including the padding segment)."""
+    p_norm, u_norm = jnp.sqrt(p_ssq), jnp.sqrt(u_ssq)
+    return jnp.where((p_norm > 0) & (u_norm > 0), p_norm / u_norm, 1.0)
+
+
+def apply_trust(pf: jnp.ndarray, update: jnp.ndarray, lr: jnp.ndarray,
+                seg_ids: jnp.ndarray, trust: jnp.ndarray) -> jnp.ndarray:
+    """The single trailing elementwise pass: trust-scaled step on the
+    (already moment-updated) fp32 params. Shapes of ``pf``/``update``/
+    ``seg_ids`` must match (one bucket or the whole stack)."""
+    sid = seg_ids.reshape(-1)
+    return pf - lr * trust[sid].reshape(pf.shape) * update
+
+
 def apply_update_flat(p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray,
                       v: jnp.ndarray, step: jnp.ndarray,
                       cfg: OptimizerConfig, lr: jnp.ndarray, *,
@@ -88,20 +158,26 @@ def apply_update_flat(p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray,
     """One LAMB step on the whole packed bucket stack.
 
     ``seg_ids`` maps every element to its source leaf (padding maps to
-    ``num_leaves`` and gets trust 1, a no-op on zero padding). Returns
-    (p', m', v', mean trust ratio over real leaves).
+    ``num_leaves`` and gets trust 1, a no-op on zero padding). On a
+    2-D (num_buckets, bucket_elems) stack the per-leaf norms are
+    computed through the same per-bucket ``bucket_norm_terms`` calls
+    the streamed overlap hooks make, combined in bucket-index order —
+    so this barrier form and the streamed form are bitwise identical.
+    Returns (p', m', v', mean trust ratio over real leaves).
     """
     pf, update, mf, vf = adam.flat_adamw_terms(
         p, g, m, v, step, cfg, decay_mask=decay_mask,
         clip_scale=clip_scale)
-    # per-leaf norms over the flat stream (leaves may span buckets)
-    sid = seg_ids.reshape(-1)
-    p_norm = jnp.sqrt(jax.ops.segment_sum(
-        jnp.square(pf.reshape(-1)), sid, num_segments=num_leaves + 1))
-    u_norm = jnp.sqrt(jax.ops.segment_sum(
-        jnp.square(update.reshape(-1)), sid, num_segments=num_leaves + 1))
-    trust = jnp.where((p_norm > 0) & (u_norm > 0), p_norm / u_norm, 1.0)
-    pf = pf - lr * trust[sid].reshape(pf.shape) * update
+    if pf.ndim == 2:
+        parts = [bucket_norm_terms(pf[k], update[k], seg_ids[k],
+                                   num_leaves)
+                 for k in range(pf.shape[0])]
+        p_ssq = combine_norm_terms([pp for pp, _ in parts])
+        u_ssq = combine_norm_terms([uu for _, uu in parts])
+    else:
+        p_ssq, u_ssq = bucket_norm_terms(pf, update, seg_ids, num_leaves)
+    trust = trust_from_norms(p_ssq, u_ssq)
+    pf = apply_trust(pf, update, lr, seg_ids, trust)
     mean_trust = jnp.mean(trust[:num_leaves])
     return (pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype),
             mean_trust)

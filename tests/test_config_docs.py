@@ -75,6 +75,7 @@ def test_readme_knob_values_match_constants(readme_tables):
         "compression": list(cfgs.COMPRESSION_MODES),
         "quantize_impl": list(cfgs.QUANTIZE_IMPLS),
         "weighting": list(cfgs.WEIGHTING_MODES),
+        "pipeline_schedule": list(cfgs.PIPELINE_MODES),
     }
     assert documented == expected, (
         f"README knob table out of sync with configs/base.py:\n"
@@ -214,6 +215,37 @@ def test_readme_quickstart_flags_exist_in_train_cli():
                 assert tok in real_flags, (
                     f"README documents unknown flag {tok}; "
                     f"known: {sorted(real_flags)}")
+
+
+def test_readme_pipeline_quickstart_documents_real_requirements():
+    """The README must document a runnable --pipeline-stages command,
+    and the requirements it demonstrates must be REAL: the documented
+    flag set carries --no-scan-layers and --accum >= stages, and
+    HetConfig.validate actually rejects a config missing them."""
+    from benchmarks import docs_smoke
+
+    commands = docs_smoke.quickstart_commands(README)
+    pipe_cmds = [a for a in commands if "--pipeline-stages" in a]
+    assert pipe_cmds, ("README quickstart documents no "
+                       "--pipeline-stages command")
+    for args in pipe_cmds:
+        stages = int(args[args.index("--pipeline-stages") + 1])
+        assert stages > 1, args
+        assert "--no-scan-layers" in args, (
+            "documented pipeline command must carry --no-scan-layers "
+            "(the per-stage VJP segments need the unrolled stack)")
+        assert "--accum" in args, args
+        accum = int(args[args.index("--accum") + 1])
+        assert accum >= stages, (
+            f"documented pipeline command has --accum {accum} < "
+            f"--pipeline-stages {stages}")
+    # the documented requirements are enforced, not decorative
+    with pytest.raises(ValueError, match="accum_steps"):
+        HetConfig(pipeline_stages=2, accum_steps=1).validate()
+    with pytest.raises(ValueError, match="overlap"):
+        HetConfig(pipeline_stages=2, accum_steps=2, overlap="buckets",
+                  grad_reduction="bucketed_allreduce",
+                  bucket_mb=1.0).validate()
 
 
 def test_readme_serve_flag_table_matches_serve_cli(readme_tables):

@@ -227,6 +227,57 @@ def test_replan_conserves_global_batch(times):
     assert new.buffer_rows == plan.buffer_rows    # no shape change
 
 
+def test_replan_from_step_times_all_dead_but_one():
+    """inf is the sanctioned dead-rank marker: with every rank but one
+    dead, the survivor inherits the whole global batch."""
+    plan = capacity.homogeneous_plan(12, 3, headroom=4.0)
+    new = capacity.replan_from_step_times(
+        plan, np.array([np.inf, 2.0, np.inf]))
+    assert new.rows_per_rank.tolist() == [0, 12, 0]
+    assert new.global_rows == plan.global_rows
+    # all dead is unplannable, not silently zero-rowed
+    with pytest.raises(ValueError, match="all ranks dead"):
+        capacity.replan_from_step_times(
+            plan, np.array([np.inf, np.inf, np.inf]))
+
+
+def test_replan_from_step_times_rejects_garbage_measurements():
+    """A zero/negative/NaN step time is a broken monitor, not a fast
+    rank — it must raise loudly NAMING the offending ranks, never
+    silently starve a healthy one."""
+    plan = capacity.homogeneous_plan(12, 3)
+    for bad, offenders in (([1.0, 0.0, 2.0], [1]),
+                           ([-0.5, 1.0, 2.0], [0]),
+                           ([1.0, np.nan, -1.0], [1, 2])):
+        with pytest.raises(ValueError, match="must be positive") as ei:
+            capacity.replan_from_step_times(plan, np.asarray(bad))
+        for r in offenders:
+            assert f"{offenders}" in str(ei.value)
+    # shape mismatch is its own loud error
+    with pytest.raises(ValueError, match="shape"):
+        capacity.replan_from_step_times(plan, np.ones(4))
+
+
+def test_replan_after_plan_record_roundtrip():
+    """plan -> plan_record -> plan_from_record is bit-faithful and the
+    round-tripped plan replans identically to the original (the
+    checkpoint-resume path feeds replan exactly this way)."""
+    import json
+    plan = capacity.plan_capacities(30, [4.0, 2.0, 1.0], headroom=1.5)
+    back = capacity.plan_from_record(
+        json.loads(json.dumps(capacity.plan_record(plan))))
+    np.testing.assert_array_equal(back.rows_per_rank,
+                                  plan.rows_per_rank)
+    np.testing.assert_array_equal(back.capacities, plan.capacities)
+    assert (back.buffer_rows, back.global_rows) == \
+        (plan.buffer_rows, plan.global_rows)
+    ema = np.array([1.0, 3.0, np.inf])
+    a = capacity.replan_from_step_times(plan, ema)
+    b = capacity.replan_from_step_times(back, ema)
+    np.testing.assert_array_equal(a.rows_per_rank, b.rows_per_rank)
+    assert a.rows_per_rank[2] == 0                # dead rank drained
+
+
 # --------------------------------------------------------------------------
 # elastic re-mesh
 # --------------------------------------------------------------------------

@@ -141,6 +141,60 @@ def test_lamb_flat_trust_ratios_match_tree_lamb():
                                rtol=1e-5)
 
 
+def test_lamb_streamed_form_bitwise_matches_barrier_form():
+    """The backward-overlap flush pipeline streams LAMB per bucket
+    (flat_adamw_terms + bucket_norm_terms hooks, one trailing
+    apply_trust). That streamed form must be BITWISE identical to the
+    whole-stack barrier ``apply_update_flat`` given the same reduced
+    stack — the contract is that both compute per-leaf norms through
+    the same per-bucket calls combined in the same bucket-index order
+    (lamb.combine_norm_terms)."""
+    params = _tree(0)
+    grads = jax.tree.map(lambda p: 0.2 * p + 0.05, _tree(1))
+    cfg = OptimizerConfig(name="lamb", grad_clip=0.0, weight_decay=0.01)
+    state = adam.init_state(params, cfg)
+    lr = jnp.float32(1e-2)
+    layout = bkt.build_layout(params, bucket_mb=1e-4, multiple_of=8)
+    pb = bkt.pack_buckets(params, layout)
+    gb = bkt.pack_buckets(grads, layout)
+    mb = bkt.pack_buckets(state.m, layout)
+    vb = bkt.pack_buckets(state.v, layout)
+    dmask = bkt.decay_mask(layout)
+    segs = bkt.segment_ids(layout)
+    n_leaves = len(layout.sizes)
+    step = state.step + 1
+    assert pb.ndim == 2 and pb.shape[0] > 1   # multi-bucket or vacuous
+
+    # barrier form: one call over the whole stack
+    bp, bm, bv, _ = lamb.apply_update_flat(
+        pb, gb, mb, vb, step, cfg, lr, decay_mask=dmask,
+        seg_ids=segs, num_leaves=n_leaves)
+
+    # streamed form: per-bucket hooks in flush order (scrambled to
+    # prove order-independence of the trailing pass), partials
+    # combined in canonical bucket-index order
+    rows = [None] * pb.shape[0]
+    flush_order = list(reversed(range(pb.shape[0])))
+    for k in flush_order:
+        pf, upd, mf, vf = adam.flat_adamw_terms(
+            pb[k], gb[k], mb[k], vb[k], step, cfg,
+            decay_mask=dmask[k])
+        psq, usq = lamb.bucket_norm_terms(pf, upd, segs[k], n_leaves)
+        rows[k] = (pf, upd, mf, vf, psq, usq)
+    trust = lamb.trust_from_norms(
+        lamb.combine_norm_terms([r[4] for r in rows]),
+        lamb.combine_norm_terms([r[5] for r in rows]))
+    pf = jnp.stack([r[0] for r in rows])
+    upd = jnp.stack([r[1] for r in rows])
+    sp = lamb.apply_trust(pf, upd, lr, segs, trust).astype(pb.dtype)
+    sm = jnp.stack([r[2] for r in rows]).astype(mb.dtype)
+    sv = jnp.stack([r[3] for r in rows]).astype(vb.dtype)
+
+    np.testing.assert_array_equal(np.asarray(bp), np.asarray(sp))
+    np.testing.assert_array_equal(np.asarray(bm), np.asarray(sm))
+    np.testing.assert_array_equal(np.asarray(bv), np.asarray(sv))
+
+
 def test_overlap_config_validation():
     """overlap='buckets'/'backward' must refuse configs they cannot
     pipeline — one clear ValueError at build time, not a failure deep
@@ -566,7 +620,9 @@ def test_backward_overlap_train_step_matches_monolithic():
         assert l1 == l2, (l1, l2)
         assert_bitwise(s1, s2)
 
-        # LAMB barrier
+        # LAMB: backward STREAMS it (per-bucket moments + norm
+        # partials mid-flush, one trailing trust pass); buckets keeps
+        # the whole-stack barrier — both must stay bitwise-equal
         l1, s1 = run("bucketed_allreduce", "none", "backward", 0.0,
                      opt="lamb")
         l2, s2 = run("bucketed_allreduce", "none", "buckets", 0.0,

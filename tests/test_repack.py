@@ -528,6 +528,43 @@ def test_meta_plan_roundtrips_structured(tmp_path):
     assert got.row_weights().shape == (3, plan.buffer_rows)
 
 
+def test_adapt_arrays_validates_pipeline_stage_block(tmp_path):
+    """A checkpoint's recorded pipeline stage plan is placement
+    metadata — params are per-leaf, so restoring across stage plans
+    needs NO translation and must round-trip bit-exactly — but a
+    malformed record means the writer was broken, and the restore must
+    fail loudly instead of resuming from a suspect checkpoint."""
+    from repro.core import pipeline as pipe
+
+    rec = pipe.stage_record(pipe.plan_stages(4, (3.0, 1.0)))
+    tree = _tree(3)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, tree,
+             meta={"format": {"version": repack.FORMAT_VERSION,
+                              "state": "pytree", "packed_fields": [],
+                              "layout": None, "pipeline": rec}},
+             block=True)
+    got, meta = mgr.restore(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the record survives JSON round-trip into a usable StagePlan
+    back = pipe.stage_from_record(meta["format"]["pipeline"])
+    assert back.layers_per_stage.tolist() == [3, 1]
+
+    # malformed blocks fail adapt loudly (broken writer)
+    arrays = repack.flatten_with_paths(
+        jax.tree.map(np.asarray, tree))
+    ok = repack.adapt_arrays(dict(arrays), tree,
+                             fmt={"pipeline": rec})
+    assert set(ok) == set(arrays)
+    for bad in ("stages=2",
+                {"num_layers": 4},
+                {"num_layers": 5, "plan": rec["plan"]}):
+        with pytest.raises(ValueError, match="malformed|sums to"):
+            repack.adapt_arrays(dict(arrays), tree,
+                                fmt={"pipeline": bad})
+
+
 def test_meta_unserializable_value_fails_loudly(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     with pytest.raises(TypeError, match="not JSON-serializable"):
