@@ -42,7 +42,13 @@ DOC = """Benchmark suite — one entry per paper table/figure + roofline.
                        per-pod peak concurrency under saturation is not
                        the capacity-plan split (slower pods strictly
                        fewer sequences); includes a 3-arrival
-                       mixed-length end-to-end smoke
+                       mixed-length end-to-end smoke and a decode-step
+                       roofline: the in-kernel-gather byte model of the
+                       paged Pallas kernels (attention_impl="pallas")
+                       must be strictly below materialize-then-attend
+                       at every swept (max_blocks, block_size) point,
+                       and the pallas engine must be token-identical to
+                       the reference engine on the smoke trace
   pipeline_bench       heterogeneous pipeline parallelism
                        (HetConfig.pipeline_stages: capacity-sized
                        contiguous stages + 1F1B): fails loudly if the
@@ -138,12 +144,17 @@ def main() -> None:
                 f"{pb['restore']['bit_identical']}"))
 
     sv = serve_bench.main(quick=args.quick)
+    rf = sv["decode_roofline"]
     csv.append(("serve_bench", 0.0,
                 f"continuous_vs_static="
                 f"{sv['throughput']['speedup']:.2f}x "
                 f"bit_identical={sv['bit_identity']['identical']} "
                 f"pod_limits={sv['routing']['pod_limits']} "
-                f"block_util_peak={sv['block_util']['peak']:.2f}"))
+                f"block_util_peak={sv['block_util']['peak']:.2f} "
+                f"roofline_kernel_beats_materialize="
+                f"{rf['kernel_strictly_better']} "
+                f"pallas_token_identical="
+                f"{rf['measured']['token_identical']}"))
 
     if args.quick:
         from benchmarks import docs_smoke, durability_smoke

@@ -23,17 +23,52 @@ the native schedule, which is what runs on real multi-host deployments.
 """
 from __future__ import annotations
 
+import logging
 from typing import Any, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+logger = logging.getLogger(__name__)
+
 AxisNames = Union[str, Tuple[str, ...]]
 
 # native all_gather/all_to_all inside partially-manual shard_map regions
 # only work on the current-API jax (see module docstring)
 NATIVE_MANUAL_COLLECTIVES = hasattr(jax, "shard_map")
+
+# Backends whose Pallas pipeline can *compile* pallas_call. The CPU
+# backend on the compat jaxlib raises at lowering time ("Only interpret
+# mode is supported on CPU backend"), so kernels selected via
+# ``attention_impl="pallas"`` / ``quantize_impl="pallas"`` must run in
+# interpret mode there — same numerics, no fused-kernel perf.
+PALLAS_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+_warned_pallas_fallbacks: Set[str] = set()
+
+
+def pallas_interpret_fallback(what: str) -> bool:
+    """True when Pallas kernels must run interpreted on this backend.
+
+    The fallback is LOUD, not silent: the first call per ``what`` logs a
+    warning that the requested kernel path still runs (same numerics,
+    the parity tests stay meaningful) but without the fused-kernel
+    performance, so a serving deployment on the wrong backend cannot
+    quietly think it is getting the in-kernel block gather. Mirrors the
+    ``quantize_impl`` precedent: the knob keeps meaning "pallas", only
+    the execution mode degrades.
+    """
+    if jax.default_backend() in PALLAS_COMPILED_BACKENDS:
+        return False
+    if what not in _warned_pallas_fallbacks:
+        _warned_pallas_fallbacks.add(what)
+        logger.warning(
+            "%s: backend %r cannot compile Pallas kernels; running the "
+            "pallas path in interpret mode (numerics preserved, fused-"
+            "kernel performance lost). Deploy on a TPU/GPU backend for "
+            "the compiled kernel.", what, jax.default_backend())
+    return True
 
 # Sharding-invariant RNG: current jax defaults this on; old versions
 # default off, making jax.random values depend on the OUTPUT SHARDING

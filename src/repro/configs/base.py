@@ -127,11 +127,15 @@ class ModelConfig:
     compute_dtype: str = "bfloat16"
     remat: str = "full"             # none | dots | full
     scan_layers: bool = True
-    attention_impl: str = "reference"   # reference | pallas
+    attention_impl: str = "reference"   # see ATTENTION_IMPLS
 
     def __post_init__(self):
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.attention_impl not in ATTENTION_IMPLS:
+            raise ValueError(
+                f"attention_impl must be one of {ATTENTION_IMPLS}, got "
+                f"'{self.attention_impl}'")
 
     # ---- derived quantities -------------------------------------------------
     @property
@@ -207,6 +211,14 @@ GRAD_REDUCTION_MODES = ("allreduce", "bucketed_allreduce", "hierarchical")
 OVERLAP_MODES = ("none", "buckets", "backward")
 COMPRESSION_MODES = ("none", "int8")
 QUANTIZE_IMPLS = ("reference", "pallas")
+# ModelConfig.attention_impl: selects the attention kernels on BOTH hot
+# paths — train/prefill flash attention (models/blocks.py) and the paged
+# decode kernels on the serving path (models/kvcache.py). "reference" is
+# the portable jnp path ("dense" forces the full-score-matrix oracle);
+# "pallas" selects the fused TPU kernels, falling back LOUDLY to
+# interpret mode where the backend can't compile Pallas
+# (compat.pallas_interpret_fallback).
+ATTENTION_IMPLS = ("reference", "dense", "pallas")
 WEIGHTING_MODES = ("tokens", "samples", "canonical")
 PIPELINE_MODES = ("1f1b", "gpipe")
 

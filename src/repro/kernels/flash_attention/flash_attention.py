@@ -148,3 +148,128 @@ def flash_attention_pallas(
     )(qt, kt, vt)
     out = out[:, :, :sq, :]
     return jnp.moveaxis(out, 1, 2)
+
+
+# --------------------------------------------------------------------------
+# paged flash decode (serving hot path: block-table gather INSIDE the kernel)
+# --------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(tables, lens, q_ref, k_ref, v_ref, o_ref,
+                         k_buf, v_buf, *, scale: float, block_size: int,
+                         max_blocks: int, null_block: int, heads: int,
+                         kv_heads: int, head_dim: int):
+    """Grid (B, MB); j sequential. Step j DMAs sequence bi's j-th mapped
+    KV block straight from the pool (the block-table lookup happens in
+    the BlockSpec index_map via scalar prefetch — no materialized window
+    in HBM) into a VMEM-resident dense view; the last step runs the
+    reference dense attention on it.
+
+    The final einsums deliberately carry singleton batch/query dims and
+    use ref.mha_dense's exact contraction strings: XLA picks a different
+    reduction tree for `"hk,khd->hd"` vs `"bhqk,bkhd->bqhd"` (1-ulp
+    drift), and the acceptance bar is fp32-BITWISE parity with the
+    materialize-then-attend reference.
+    """
+    bi = pl.program_id(0)
+    j = pl.program_id(1)
+    q_per_kv = heads // kv_heads
+    s_g = max_blocks * block_size
+
+    # NULL (unmapped) blocks were clamped to a real pool slot by the
+    # index_map; zero the tile so it matches the reference's
+    # `.get(mode="fill", fill_value=0)` gather bit-for-bit.
+    is_null = tables[bi, j] == null_block
+    k_buf[pl.dslice(j * block_size, block_size)] = jnp.where(
+        is_null, 0.0, k_ref[0]).astype(jnp.float32)
+    v_buf[pl.dslice(j * block_size, block_size)] = jnp.where(
+        is_null, 0.0, v_ref[0]).astype(jnp.float32)
+
+    @pl.when(j == max_blocks - 1)
+    def _attend():
+        kk = k_buf[...]                               # (s_g, Hkv, D) f32
+        vv = v_buf[...]
+        q4 = q_ref[0][None]                           # (1, 1, H, D)
+        k_rep = jnp.broadcast_to(
+            kk[None, :, :, None, :],
+            (1, s_g, kv_heads, q_per_kv, head_dim),
+        ).reshape(1, s_g, heads, head_dim)
+        v_rep = jnp.broadcast_to(
+            vv[None, :, :, None, :],
+            (1, s_g, kv_heads, q_per_kv, head_dim),
+        ).reshape(1, s_g, heads, head_dim)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q4.astype(jnp.float32),
+                       k_rep) * scale
+        mask = jnp.arange(s_g)[None, None, None, :] < lens[bi]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v_rep)
+        o_ref[...] = o.astype(o_ref.dtype)
+
+
+def flash_decode_paged_pallas(
+    q: jnp.ndarray,                      # (B, 1, H, D)
+    k_pool: jnp.ndarray,                 # (N, bs, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,           # (B, MB) int32, NULL == N
+    kv_lens: jnp.ndarray,                # (B,) int32 EFFECTIVE lengths
+    *,
+    softmax_scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-query GQA decode over a paged KV pool, gather in-kernel.
+
+    ``kv_lens`` are the effective context lengths (positions
+    ``>= kv_lens[i]`` are masked); the new token's K/V must already be
+    scattered into the pool. Returns (B, 1, H, D) in q's dtype, fp32-
+    bitwise vs gathering the window with ``mode="fill"`` and running
+    ``ref.mha_dense(causal=False, kv_len=kv_lens)``.
+
+    HBM traffic per step is ONE pass over the mapped window (the
+    index_map-driven DMA), vs the materialized path's gather-read +
+    window-write + attend-read — see benchmarks/serve_bench.py's decode
+    roofline for the byte model.
+    """
+    b, sq, h, d = q.shape
+    if sq != 1:
+        raise ValueError(f"paged decode expects a single query, got {sq}")
+    n_pool, bs, hkv, _ = k_pool.shape
+    mb = block_tables.shape[1]
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    s_g = mb * bs
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, block_size=bs, max_blocks=mb,
+        null_block=n_pool, heads=h, kv_heads=hkv, head_dim=d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d),
+                         lambda bi, j, tbl, lens: (bi, 0, 0, 0)),
+            # block-table indirection lives HERE: the DMA source block is
+            # tbl[bi, j] (clamped for NULL; the kernel zeroes those tiles)
+            pl.BlockSpec((1, bs, hkv, d),
+                         lambda bi, j, tbl, lens: (
+                             jnp.minimum(tbl[bi, j], n_pool - 1), 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d),
+                         lambda bi, j, tbl, lens: (
+                             jnp.minimum(tbl[bi, j], n_pool - 1), 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, d),
+                               lambda bi, j, tbl, lens: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((s_g, hkv, d), jnp.float32),   # gathered K view
+            pltpu.VMEM((s_g, hkv, d), jnp.float32),   # gathered V view
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, d), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), kv_lens.astype(jnp.int32),
+      q, k_pool, v_pool)

@@ -44,3 +44,46 @@ def flash_attention(
             q, k, v, causal=causal, q_offset=q_offset,
             softmax_scale=softmax_scale, interpret=interpret)
     raise ValueError(f"unknown attention impl '{impl}'")
+
+
+def flash_decode_paged(
+    q: jnp.ndarray,                      # (B, 1, H, D)
+    k_pool: jnp.ndarray,                 # (N, bs, Hkv, D)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,           # (B, MB) int32, NULL == N
+    kv_lens: jnp.ndarray,                # (B,) int32 effective lengths
+    *,
+    softmax_scale: Optional[float] = None,
+    impl: str = "reference",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-query GQA decode over a paged pool (serving hot path).
+
+    ``impl``:
+      * "reference"/"dense" — materialize-then-attend: gather each
+        sequence's mapped blocks into a dense (B, MB*bs, Hkv, D) window
+        in HBM (NULL blocks fill with zeros) and run ``ref.mha_dense``.
+      * "pallas" — in-kernel block gather: the block-table lookup drives
+        the kernel's DMA index_map, so no window is ever materialized.
+        fp32-bitwise vs the reference path.
+
+    ``kv_lens`` are effective context lengths: positions >= kv_lens[i]
+    are masked, so callers attending to a just-written token pass
+    ``cached + 1``.
+    """
+    if impl in ("reference", "dense"):
+        b = q.shape[0]
+        k_g = k_pool.at[block_tables].get(
+            mode="fill", fill_value=0).reshape(b, -1, *k_pool.shape[2:])
+        v_g = v_pool.at[block_tables].get(
+            mode="fill", fill_value=0).reshape(b, -1, *v_pool.shape[2:])
+        return ref.mha_dense(q, k_g, v_g, causal=False,
+                             softmax_scale=softmax_scale, kv_len=kv_lens)
+    if impl == "pallas":
+        from repro.kernels.flash_attention.flash_attention import (
+            flash_decode_paged_pallas,
+        )
+        return flash_decode_paged_pallas(
+            q, k_pool, v_pool, block_tables, kv_lens,
+            softmax_scale=softmax_scale, interpret=interpret)
+    raise ValueError(f"unknown attention impl '{impl}'")

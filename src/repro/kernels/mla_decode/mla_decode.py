@@ -113,3 +113,113 @@ def mla_decode_pallas(q_abs, q_r, ckv, kr, kv_len, scale,
         interpret=interpret,
     )(q_abs, q_r, ckv, kr, kv_len.reshape(b, 1).astype(jnp.int32))
     return out
+
+
+# --------------------------------------------------------------------------
+# paged variant: block-table gather inside the kernel (serving hot path)
+# --------------------------------------------------------------------------
+
+
+def _paged_kernel(tables, lens, qa_ref, qr_ref, ckv_ref, kr_ref, out_ref,
+                  acc_ref, m_ref, l_ref, *, scale, block_size, max_blocks,
+                  null_block, heads):
+    """Grid (B, MB); j sequential. The chunk axis of the contiguous
+    kernel becomes the sequence's logical block axis: each step's
+    (bs, r) latent tile is DMA'd straight from the pool block named by
+    the block table (scalar-prefetch index_map) — NULL blocks arrive
+    clamped and are zeroed, then fully masked by kv_len. The fp32
+    online-softmax state persists in scratch; the VMEM-resident ckv
+    tile is reused for both the score and the value matmul, preserving
+    the one-HBM-pass property on the paged pool.
+    """
+    bi = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    is_null = tables[bi, j] == null_block
+    qa = qa_ref[0]                                 # (H, r)
+    qr = qr_ref[0]                                 # (H, Dr)
+    ckv = jnp.where(is_null, 0, ckv_ref[0])        # (bs, r) — ONE load
+    kr = jnp.where(is_null, 0, kr_ref[0])          # (bs, Dr)
+
+    s = (jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32) +
+         jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)) * scale
+    kpos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (heads, block_size), 1)
+    s = jnp.where(kpos < lens[bi], s, NEG_INF)
+
+    m_prev = m_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr[:, None] + \
+        jnp.sum(p, axis=-1, keepdims=True)
+    # value accumulation REUSES the VMEM-resident ckv tile
+    acc_ref[...] = (acc_ref[...] * corr[:, None] +
+                    jax.lax.dot_general(
+                        p.astype(ckv.dtype), ckv,
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new[:, None]
+
+    @pl.when(j == max_blocks - 1)
+    def _finish():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def mla_decode_paged_pallas(q_abs, q_r, ckv_pool, kr_pool, block_tables,
+                            kv_lens, scale, *, interpret: bool = False):
+    """Absorbed-MLA decode over a paged latent pool, gather in-kernel.
+
+    q_abs (B, H, r); q_r (B, H, Dr); ckv_pool (N, bs, r); kr_pool
+    (N, bs, Dr); block_tables (B, MB) int32 with NULL == N; kv_lens (B,)
+    int32 EFFECTIVE lengths (positions >= kv_lens[i] masked). Returns
+    (B, H, r) fp32 attention output in latent space, within compute-
+    dtype tolerance of the materialize-then-attend reference.
+    """
+    b, h, r = q_abs.shape
+    dr = q_r.shape[-1]
+    n_pool, bs, _ = ckv_pool.shape
+    mb = block_tables.shape[1]
+
+    kernel = functools.partial(
+        _paged_kernel, scale=float(scale), block_size=bs, max_blocks=mb,
+        null_block=n_pool, heads=h)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, h, r), lambda bi, j, tbl, lens: (bi, 0, 0)),
+            pl.BlockSpec((1, h, dr), lambda bi, j, tbl, lens: (bi, 0, 0)),
+            pl.BlockSpec((1, bs, r),
+                         lambda bi, j, tbl, lens: (
+                             jnp.minimum(tbl[bi, j], n_pool - 1), 0, 0)),
+            pl.BlockSpec((1, bs, dr),
+                         lambda bi, j, tbl, lens: (
+                             jnp.minimum(tbl[bi, j], n_pool - 1), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, r),
+                               lambda bi, j, tbl, lens: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, r), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), kv_lens.astype(jnp.int32),
+      q_abs, q_r, ckv_pool, kr_pool)

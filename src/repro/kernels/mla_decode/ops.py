@@ -16,3 +16,36 @@ def mla_decode_attention(q_abs, q_r, ckv, kr, kv_len, scale,
         return mla_decode_pallas(q_abs, q_r, ckv, kr, kv_len, scale,
                                  chunk=chunk, interpret=interpret)
     raise ValueError(f"unknown mla decode impl '{impl}'")
+
+
+def mla_decode_paged_attention(q_abs, q_r, ckv_pool, kr_pool,
+                               block_tables, kv_lens, scale,
+                               *, impl: str = "reference",
+                               interpret: bool = False):
+    """Absorbed-MLA decode over a paged latent pool.
+
+    ckv_pool (N, bs, r); kr_pool (N, bs, Dr); block_tables (B, MB)
+    int32 with NULL == N; kv_lens (B,) effective lengths. Returns
+    out_lat (B, H, r) fp32.
+
+    ``impl``: "reference"/"dense" gathers the mapped blocks into a
+    dense (B, MB*bs, ...) window (NULL fills zeros) and runs
+    ``ref.mla_decode_dense``; "pallas" streams pool blocks through the
+    block table inside the kernel (one HBM pass, no window).
+    """
+    if impl in ("reference", "dense"):
+        b = q_abs.shape[0]
+        ckv_g = ckv_pool.at[block_tables].get(
+            mode="fill", fill_value=0).reshape(b, -1, ckv_pool.shape[-1])
+        kr_g = kr_pool.at[block_tables].get(
+            mode="fill", fill_value=0).reshape(b, -1, kr_pool.shape[-1])
+        return ref.mla_decode_dense(q_abs, q_r, ckv_g, kr_g, kv_lens,
+                                    scale)
+    if impl == "pallas":
+        from repro.kernels.mla_decode.mla_decode import (
+            mla_decode_paged_pallas,
+        )
+        return mla_decode_paged_pallas(q_abs, q_r, ckv_pool, kr_pool,
+                                       block_tables, kv_lens, scale,
+                                       interpret=interpret)
+    raise ValueError(f"unknown mla decode impl '{impl}'")

@@ -21,6 +21,7 @@ Example (CPU):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
 from typing import List, Optional, Sequence, Tuple
 
@@ -68,7 +69,8 @@ def build_engine(model: Model, params, mesh, layout: PagedLayout,
         functools.partial(model.init_paged_cache, layout),
         out_shardings=shr.named(mesh, cspecs))
     return ServeEngine(EngineConfig(decode_slots=slots,
-                                    prefill_batch=prefill_batch),
+                                    prefill_batch=prefill_batch,
+                                    attention_impl=model.cfg.attention_impl),
                        layout, sched, functools.partial(decode, params),
                        prefill_fns, init_cache_fn)
 
@@ -118,6 +120,7 @@ def serve(args):
     if cfg.frontend != "token":
         raise SystemExit(f"--arch {args.arch}: the serving engine "
                          f"requires a token frontend")
+    cfg = dataclasses.replace(cfg, attention_impl=args.attention_impl)
     model = build_model(cfg)
     dshape = tuple(int(x) for x in args.devices.split(","))
     axes = ("data", "model") if len(dshape) == 2 else ("pod", "data",
@@ -185,6 +188,12 @@ def main():
     ap.add_argument("--pod-speeds", default="",
                     help="comma list of modeled pod speeds "
                          "(default: 1.0 per DP rank)")
+    ap.add_argument("--attention-impl", default="reference",
+                    choices=list(cfgbase.ATTENTION_IMPLS),
+                    help="decode attention kernels: 'pallas' gathers KV "
+                         "blocks through the block table inside the "
+                         "kernel (interpret-mode fallback, loudly, off "
+                         "TPU); 'reference' materializes the window")
     serve(ap.parse_args())
 
 

@@ -1937,6 +1937,13 @@ def serve_batch_spec(batch: int, mesh: Mesh, what: str):
     loss, so it is worth a warning, not a comment (the old static
     driver fell back without a word). Pick batch/slots as a multiple
     of prod(devices[:-1]) to shard.
+
+    Once-per-build contract: this runs ONLY inside
+    ``build_paged_prefill_step`` / ``build_paged_decode_step`` (outside
+    the jitted functions they return), so the warning fires once per
+    step build, never once per decode step — a serve loop is thousands
+    of steps and a per-step warning would bury the log. Pinned by
+    tests/test_serve.py::test_serve_batch_spec_warns_once_per_build.
     """
     dp = mesh_dp_axes(mesh)
     if batch % dp_size(mesh) == 0:

@@ -227,7 +227,10 @@ def attention_block(params, x: jnp.ndarray, cfg: ModelConfig,
                                      None))
     out = attn_ops.flash_attention(
         q, k, v, causal=True, q_offset=q_offset,
-        impl=cfg.attention_impl if s > 1 else "dense")
+        impl=cfg.attention_impl if s > 1 else "dense",
+        interpret=(s > 1 and cfg.attention_impl == "pallas" and
+                   compat.pallas_interpret_fallback(
+                       "flash attention (attention_impl='pallas')")))
     out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
     y = out @ _cast(params["wo"], cfg.compute_dtype)
     y = constrain(y, ctx, batch_spec(ctx, None, None))
@@ -318,7 +321,10 @@ def mla_block(params, x, cfg: ModelConfig, ctx: ParallelCtx,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - m.v_head_dim)))
     out = attn_ops.flash_attention(
         q, k, v, causal=True, q_offset=q_offset, softmax_scale=scale,
-        impl=cfg.attention_impl if s > 1 else "dense")
+        impl=cfg.attention_impl if s > 1 else "dense",
+        interpret=(s > 1 and cfg.attention_impl == "pallas" and
+                   compat.pallas_interpret_fallback(
+                       "MLA flash attention (attention_impl='pallas')")))
     out = out[..., :m.v_head_dim].reshape(b, s, h * m.v_head_dim)
     y = out @ _cast(params["wo"], cfg.compute_dtype)
     y = constrain(y, ctx, batch_spec(ctx, None, None))

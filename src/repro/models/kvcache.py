@@ -44,8 +44,11 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import ops as attn_ops
 from repro.kernels.flash_attention import ref as attn_ref
+from repro.kernels.mla_decode import ops as mla_ops
 from repro.models.blocks import (ParallelCtx, _cast, apply_rope,
                                  attention_qkv, batch_spec, constrain,
                                  mla_latent, mla_queries)
@@ -285,16 +288,20 @@ def attention_decode_paged(params, x: jnp.ndarray, cfg: ModelConfig,
         k[:, 0].astype(k_cache.dtype), mode="drop")
     v_cache = v_cache.at[blk, off].set(
         v[:, 0].astype(v_cache.dtype), mode="drop")
-    # gather each sequence's mapped blocks back into a dense view; NULL
-    # entries fill with zeros — bit-identical to untouched contiguous
-    # cache, which keeps this path bitwise equal to attention_decode in
-    # fp32 (same dense reduction shape, masked tails exactly 0.0).
-    k_g = k_cache.at[block_tables].get(
-        mode="fill", fill_value=0).reshape(b, -1, *k_cache.shape[2:])
-    v_g = v_cache.at[block_tables].get(
-        mode="fill", fill_value=0).reshape(b, -1, *v_cache.shape[2:])
-    out = attn_ref.mha_dense(q, k_g, v_g, causal=False,
-                             kv_len=kv_lens + 1)
+    # attention over the pool, per cfg.attention_impl: the reference
+    # path gathers each sequence's mapped blocks back into a dense view
+    # (NULL entries fill with zeros — bit-identical to untouched
+    # contiguous cache, which keeps it bitwise equal to
+    # attention_decode in fp32); the pallas path gathers blocks through
+    # the block table INSIDE the kernel (no HBM window), fp32-bitwise
+    # vs the reference, and runs interpreted with a loud warning where
+    # the backend can't compile Pallas.
+    out = attn_ops.flash_decode_paged(
+        q, k_cache, v_cache, block_tables, kv_lens + 1,
+        impl=cfg.attention_impl,
+        interpret=(cfg.attention_impl == "pallas" and
+                   compat.pallas_interpret_fallback(
+                       "paged GQA decode (attention_impl='pallas')")))
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
     y = out @ _cast(params["wo"], cfg.compute_dtype)
     return constrain(y, ctx, batch_spec(ctx, None, None)), (k_cache, v_cache)
@@ -314,6 +321,13 @@ def mla_decode_paged(params, x: jnp.ndarray, cfg: ModelConfig,
     x (B, 1, d); ckv_cache (N, bs, r); kr_cache (N, bs, Dr);
     block_tables (B, MB); kv_lens (B,). Same absorbed formulation —
     scores against the gathered latent view, mask positions >= kv_len+1.
+
+    ``cfg.attention_impl="pallas"`` replaces the materialized gather
+    with the in-kernel block-table stream
+    (kernels/mla_decode/mla_decode.py, one HBM pass over the latent
+    pool), within compute-dtype tolerance of this reference; on
+    backends that can't compile Pallas it runs interpreted with a loud
+    warning (compat.pallas_interpret_fallback).
     """
     b = x.shape[0]
     m, h = cfg.mla, cfg.num_heads
@@ -329,27 +343,34 @@ def mla_decode_paged(params, x: jnp.ndarray, cfg: ModelConfig,
         c_kv[:, 0].astype(ckv_cache.dtype), mode="drop")
     kr_cache = kr_cache.at[blk, off].set(
         k_r[:, 0].astype(kr_cache.dtype), mode="drop")
-    ckv_g = ckv_cache.at[block_tables].get(
-        mode="fill", fill_value=0).reshape(b, -1, m.kv_lora_rank)
-    kr_g = kr_cache.at[block_tables].get(
-        mode="fill", fill_value=0).reshape(b, -1, m.rope_head_dim)
-
     w_uk = _cast(params["w_uk"], cdt).reshape(
         m.kv_lora_rank, h, m.nope_head_dim)
     q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
                        preferred_element_type=jnp.float32).astype(cdt)
     scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
-    scores = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv_g,
-                         preferred_element_type=jnp.float32) +
-              jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(cdt),
-                         kr_g,
-                         preferred_element_type=jnp.float32)) * scale
-    s_g = ckv_g.shape[1]
-    mask = jnp.arange(s_g)[None, None, :] < (kv_lens + 1)[:, None, None]
-    scores = jnp.where(mask, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
-    out_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_g,
-                         preferred_element_type=jnp.float32)
+    if cfg.attention_impl == "pallas":
+        out_lat = mla_ops.mla_decode_paged_attention(
+            q_abs, q_rope[:, 0].astype(cdt), ckv_cache, kr_cache,
+            block_tables, kv_lens + 1, scale, impl="pallas",
+            interpret=compat.pallas_interpret_fallback(
+                "paged MLA decode (attention_impl='pallas')"))
+    else:
+        ckv_g = ckv_cache.at[block_tables].get(
+            mode="fill", fill_value=0).reshape(b, -1, m.kv_lora_rank)
+        kr_g = kr_cache.at[block_tables].get(
+            mode="fill", fill_value=0).reshape(b, -1, m.rope_head_dim)
+        scores = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv_g,
+                             preferred_element_type=jnp.float32) +
+                  jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(cdt),
+                             kr_g,
+                             preferred_element_type=jnp.float32)) * scale
+        s_g = ckv_g.shape[1]
+        mask = jnp.arange(s_g)[None, None, :] < \
+            (kv_lens + 1)[:, None, None]
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+        out_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_g,
+                             preferred_element_type=jnp.float32)
     w_uv = _cast(params["w_uv"], cdt).reshape(
         m.kv_lora_rank, h, m.v_head_dim)
     out = jnp.einsum("bhr,rhd->bhd", out_lat.astype(cdt), w_uv,

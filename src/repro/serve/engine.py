@@ -43,6 +43,10 @@ class EngineConfig:
     decode_slots: int
     prefill_batch: int
     max_iterations: int = 100_000     # runaway-loop guard, fail loud
+    # which decode attention ran (ModelConfig.attention_impl at build
+    # time) — recorded in stats so a serving run is auditable about
+    # whether the hot path used the in-kernel block gather
+    attention_impl: str = "reference"
 
 
 @dataclasses.dataclass
@@ -212,6 +216,7 @@ class ServeEngine:
             "block_util_peak": block_util_peak,
             "block_util_mean": (block_util_sum / util_samples
                                 if util_samples else 0.0),
+            "attention_impl": self.cfg.attention_impl,
             "wall_seconds": wall,
         }
         return ServeResult(tokens=tokens_out, stats=stats)

@@ -76,6 +76,7 @@ def test_readme_knob_values_match_constants(readme_tables):
         "quantize_impl": list(cfgs.QUANTIZE_IMPLS),
         "weighting": list(cfgs.WEIGHTING_MODES),
         "pipeline_schedule": list(cfgs.PIPELINE_MODES),
+        "attention_impl": list(cfgs.ATTENTION_IMPLS),
     }
     assert documented == expected, (
         f"README knob table out of sync with configs/base.py:\n"
@@ -273,6 +274,49 @@ def test_readme_serve_flag_table_matches_serve_cli(readme_tables):
         f"README serve flag table out of sync with launch/serve.py:\n"
         f"documented-only={sorted(documented - real_flags)}\n"
         f"parser-only={sorted(real_flags - documented)}")
+
+
+def test_attention_impl_knob_is_pinned_end_to_end():
+    """``attention_impl`` (PR 9): the serve CLI's choices are EXACTLY
+    ``ATTENTION_IMPLS``, ModelConfig rejects unknown values with a
+    message naming the knob, and both docs surfaces — the README
+    serving section and architecture.md §serving engine — document the
+    flag and its loud interpret-mode fallback."""
+    from repro.launch import serve as serve_mod
+
+    import argparse
+    choices = {}
+    orig = argparse.ArgumentParser.parse_args
+    try:
+        argparse.ArgumentParser.parse_args = lambda self, *a, **k: (
+            choices.update({o: action.choices
+                            for action in self._actions
+                            for o in action.option_strings}),
+            sys.exit(0))[1]
+        with pytest.raises(SystemExit):
+            serve_mod.main()
+    finally:
+        argparse.ArgumentParser.parse_args = orig
+    assert list(choices["--attention-impl"]) == list(
+        cfgs.ATTENTION_IMPLS), (
+        f"serve --attention-impl choices {choices['--attention-impl']} "
+        f"!= configs/base.py ATTENTION_IMPLS {cfgs.ATTENTION_IMPLS}")
+
+    with pytest.raises(ValueError, match="attention_impl"):
+        dataclasses.replace(cfgs.smoke_config("olmo-1b"),
+                            attention_impl="bogus")
+
+    with open(README) as fh:
+        readme = fh.read()
+    assert "--attention-impl" in readme
+    arch_md = os.path.join(REPO, "docs", "architecture.md")
+    with open(arch_md) as fh:
+        arch = fh.read()
+    for doc, text in (("README.md", readme),
+                      ("docs/architecture.md", arch)):
+        assert "attention_impl" in text and "interpret" in text, (
+            f"{doc} must document the attention_impl knob and its "
+            f"loud interpret-mode fallback")
 
 
 def test_label_smoothing_is_wired_through_the_train_step():

@@ -17,6 +17,10 @@ from repro.kernels.quantize.quantize import quantize_int8_pallas
 from repro.kernels.ssd_scan import ref as ssd_ref
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
 
+# every test here executes pallas_call with interpret=True; skip the
+# whole module (with the probe's reason) where that cannot run
+pytestmark = pytest.mark.pallas_interpret
+
 
 # --------------------------------------------------------------------------
 # flash attention

@@ -1,0 +1,194 @@
+"""Property-based parity for the paged decode kernels (PR 9 tentpole).
+
+The paged Pallas kernels gather KV blocks through the block table
+INSIDE the kernel; the reference path materializes the window in HBM
+first (``.at[tables].get(mode="fill", fill_value=0)``). The acceptance
+bar is asymmetric by design:
+
+  * GQA flash decode — fp32-BITWISE equal to the reference across
+    ragged kv_lens / block sizes / head counts / GQA group sizes (the
+    kernel replicates ``ref.mha_dense``'s exact contraction shapes; a
+    same-math different-shape einsum drifts by 1 ulp on XLA CPU).
+  * absorbed-MLA decode — within compute-dtype tolerance (the kernel is
+    a streaming online-softmax, a different — better — reduction order
+    than the dense reference).
+
+Everything runs in interpret mode (``pallas_interpret`` marker) so the
+sweep executes on the compat CPU jaxlib in CI.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.kernels.mla_decode import ops as mla_ops
+
+pytestmark = pytest.mark.pallas_interpret
+
+
+def _ragged_tables(rng, batch, mb, bs, n_pool):
+    """Prefix-mapped block tables + ragged effective kv_lens.
+
+    Each sequence maps just enough distinct pool blocks for its depth;
+    the rest of its table row is NULL (== n_pool). Depths deliberately
+    hit block boundaries (1, bs, s_g) as well as interiors.
+    """
+    s_g = mb * bs
+    kv_lens = np.asarray(
+        [int(rng.integers(1, s_g + 1)) for _ in range(batch)], np.int32)
+    perm = rng.permutation(n_pool)
+    tables = np.full((batch, mb), n_pool, np.int32)
+    used = 0
+    for i in range(batch):
+        nb = -(-int(kv_lens[i]) // bs)
+        tables[i, :nb] = perm[used:used + nb]
+        used += nb
+    return jnp.asarray(tables), jnp.asarray(kv_lens)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bs=st.sampled_from([2, 4, 8]),
+       mb=st.integers(min_value=1, max_value=4),
+       hkv=st.sampled_from([1, 2, 3]),
+       q_per_kv=st.sampled_from([1, 2, 4]),
+       d=st.sampled_from([4, 8, 16]),
+       lens_seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_gqa_paged_pallas_bitwise_vs_reference(pallas_interpret, bs, mb,
+                                               hkv, q_per_kv, d,
+                                               lens_seed):
+    rng = np.random.default_rng((bs, mb, hkv, q_per_kv, d, lens_seed))
+    batch = int(rng.integers(1, 5))
+    h = hkv * q_per_kv
+    n_pool = batch * mb + 2           # spare blocks stay unmapped
+    tables, kv_lens = _ragged_tables(rng, batch, mb, bs, n_pool)
+    q = jnp.asarray(rng.standard_normal((batch, 1, h, d)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((n_pool, bs, hkv, d)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((n_pool, bs, hkv, d)),
+                         jnp.float32)
+    out_ref = attn_ops.flash_decode_paged(
+        q, k_pool, v_pool, tables, kv_lens, impl="reference")
+    out_pal = attn_ops.flash_decode_paged(
+        q, k_pool, v_pool, tables, kv_lens, impl="pallas",
+        interpret=pallas_interpret)
+    assert np.array_equal(np.asarray(out_ref), np.asarray(out_pal)), (
+        f"paged GQA pallas decode not fp32-bitwise vs reference "
+        f"(max err {np.abs(np.asarray(out_ref) - np.asarray(out_pal)).max()}"
+        f", shapes bs={bs} mb={mb} hkv={hkv} qpk={q_per_kv} d={d} "
+        f"kv_lens={np.asarray(kv_lens).tolist()})")
+
+
+@settings(max_examples=20, deadline=None)
+@given(bs=st.sampled_from([2, 4, 8]),
+       mb=st.integers(min_value=1, max_value=4),
+       h=st.sampled_from([2, 4, 8]),
+       r=st.sampled_from([8, 16]),
+       dr=st.sampled_from([4, 8]),
+       lens_seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_mla_paged_pallas_tolerance_vs_reference(pallas_interpret, bs, mb,
+                                                 h, r, dr, lens_seed):
+    rng = np.random.default_rng((bs, mb, h, r, dr, lens_seed))
+    batch = int(rng.integers(1, 4))
+    n_pool = batch * mb + 2
+    tables, kv_lens = _ragged_tables(rng, batch, mb, bs, n_pool)
+    q_abs = jnp.asarray(rng.standard_normal((batch, h, r)), jnp.float32)
+    q_r = jnp.asarray(rng.standard_normal((batch, h, dr)), jnp.float32)
+    ckv = jnp.asarray(rng.standard_normal((n_pool, bs, r)), jnp.float32)
+    kr = jnp.asarray(rng.standard_normal((n_pool, bs, dr)), jnp.float32)
+    scale = (r + dr) ** -0.5
+    out_ref = mla_ops.mla_decode_paged_attention(
+        q_abs, q_r, ckv, kr, tables, kv_lens, scale, impl="reference")
+    out_pal = mla_ops.mla_decode_paged_attention(
+        q_abs, q_r, ckv, kr, tables, kv_lens, scale, impl="pallas",
+        interpret=pallas_interpret)
+    np.testing.assert_allclose(np.asarray(out_ref), np.asarray(out_pal),
+                               atol=2e-5)
+
+
+def test_gqa_paged_null_sentinel_fully_masked(pallas_interpret):
+    """An inactive slot (all-NULL table, kv_len 1) must match the
+    reference's zero-fill gather bitwise — the clamped DMA source block
+    holds real data the kernel is required to zero out."""
+    rng = np.random.default_rng(7)
+    bs, mb, hkv, d, n_pool = 4, 3, 2, 8, 6
+    k_pool = jnp.asarray(rng.standard_normal((n_pool, bs, hkv, d)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((n_pool, bs, hkv, d)),
+                         jnp.float32)
+    q = jnp.asarray(rng.standard_normal((2, 1, 4, d)), jnp.float32)
+    tables = jnp.asarray(
+        [[0, 1, n_pool],              # active: 2 mapped blocks
+         [n_pool, n_pool, n_pool]],   # inactive slot: all NULL
+        jnp.int32)
+    kv_lens = jnp.asarray([2 * bs, 1], jnp.int32)
+    out_ref = attn_ops.flash_decode_paged(
+        q, k_pool, v_pool, tables, kv_lens, impl="reference")
+    out_pal = attn_ops.flash_decode_paged(
+        q, k_pool, v_pool, tables, kv_lens, impl="pallas",
+        interpret=pallas_interpret)
+    assert np.array_equal(np.asarray(out_ref), np.asarray(out_pal))
+
+
+def test_model_level_paged_decode_bitwise_fp32(pallas_interpret):
+    """Full-model parity: decode_paged logits with attention_impl=
+    'pallas' are fp32-bitwise (GQA) / tolerance-equal (MLA) vs the
+    reference engine path, through scatter + attention + unembed."""
+    from repro.configs import base as cfgbase
+    from repro.models import kvcache as kvc
+    from repro.models.model import build_model
+
+    for arch, bitwise in [("olmo-1b", True), ("deepseek-v2-236b", False)]:
+        cfg = dataclasses.replace(
+            cfgbase.smoke_config(arch), param_dtype="float32",
+            compute_dtype="float32", remat="none")
+        model_r = build_model(cfg)
+        model_p = build_model(
+            dataclasses.replace(cfg, attention_impl="pallas"))
+        layout = kvc.PagedLayout(block_size=4, num_blocks=24,
+                                 max_blocks_per_seq=4)
+        params = jax.jit(model_r.init_params)(jax.random.PRNGKey(0))
+        kv_lens = jnp.asarray([5, 9, 12], jnp.int32)
+        tables_np = np.full((3, 4), layout.null_block, np.int32)
+        blk = 0
+        for i in range(3):
+            nb = layout.blocks_for(int(kv_lens[i]) + 1)
+            tables_np[i, :nb] = np.arange(blk, blk + nb)
+            blk += nb
+        tables = jnp.asarray(tables_np)
+        key = jax.random.PRNGKey(1)
+        cache_r, cache_p = {}, {}
+        for name, leaf in model_r.init_paged_cache(layout).items():
+            key, k2 = jax.random.split(key)
+            content = jax.random.normal(k2, leaf.shape, leaf.dtype)
+            cache_r[name], cache_p[name] = content, content
+        toks = jnp.asarray([3, 1, 4], jnp.int32)
+        lr, _ = model_r.decode_paged(params, toks, cache_r, tables,
+                                     kv_lens)
+        lp, _ = model_p.decode_paged(params, toks, cache_p, tables,
+                                     kv_lens)
+        if bitwise:
+            assert np.array_equal(np.asarray(lr), np.asarray(lp)), (
+                f"{arch}: pallas decode logits not fp32-bitwise vs "
+                f"reference")
+        else:
+            np.testing.assert_allclose(np.asarray(lr), np.asarray(lp),
+                                       atol=1e-4)
+
+
+def test_unknown_impl_raises():
+    z4 = jnp.zeros((1, 1, 2, 4))
+    pool = jnp.zeros((2, 2, 2, 4))
+    tbl = jnp.zeros((1, 1), jnp.int32)
+    lens = jnp.ones((1,), jnp.int32)
+    with pytest.raises(ValueError, match="unknown attention impl"):
+        attn_ops.flash_decode_paged(z4, pool, pool, tbl, lens,
+                                    impl="nope")
+    with pytest.raises(ValueError, match="unknown mla decode impl"):
+        mla_ops.mla_decode_paged_attention(
+            jnp.zeros((1, 2, 8)), jnp.zeros((1, 2, 4)),
+            jnp.zeros((2, 2, 8)), jnp.zeros((2, 2, 4)), tbl, lens, 0.1,
+            impl="nope")

@@ -237,3 +237,99 @@ def test_decode_step_compiles_once():
                                                           2: 5}
     assert res.stats["decode_steps"] > 0
     assert res.stats["block_util_peak"] <= 1.0
+
+
+# --------------------------------------------------------------------------
+# PR 9: pallas decode kernels on the engine hot path
+# --------------------------------------------------------------------------
+
+
+_PR9_REQS = [Request(0, (1, 2, 3), 4, 0.0),
+             Request(1, tuple(range(1, 8)), 3, 0.5),
+             Request(2, (9, 8), 5, 4.0)]
+
+
+def _engine_run(impl):
+    cfg, model, _ = _model("olmo-1b", compute_dtype="float32",
+                           attention_impl=impl)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = steps_mod.init_params_sharded(model, mesh,
+                                           jax.random.PRNGKey(0))
+    layout = PagedLayout(block_size=4, num_blocks=12,
+                         max_blocks_per_seq=4)
+    with compat.set_mesh(mesh):
+        eng = serve_mod.build_engine(model, params, mesh, layout,
+                                     slots=2, prefill_batch=2,
+                                     pod_speeds=[1.0])
+        res = eng.run(list(_PR9_REQS))
+    return eng, res
+
+
+@pytest.mark.pallas_interpret
+def test_engine_pallas_token_identical_to_reference():
+    """A full compile-once engine run with attention_impl='pallas'
+    (in-kernel block gather, interpret-mode on CPU) emits exactly the
+    same tokens as the reference engine on the same trace — the fp32-
+    bitwise kernel parity surviving scatter, scheduling and argmax."""
+    eng_ref, res_ref = _engine_run("reference")
+    eng_pal, res_pal = _engine_run("pallas")
+    assert _trace_count(eng_pal.decode_fn) == 1
+    assert res_ref.stats["attention_impl"] == "reference"
+    assert res_pal.stats["attention_impl"] == "pallas"
+    assert res_pal.tokens == res_ref.tokens
+    assert res_pal.stats["decode_steps"] == res_ref.stats["decode_steps"]
+
+
+@pytest.mark.pallas_interpret
+def test_engine_pallas_retrace_guard_still_fires():
+    """The fixed-shape fail-loud contract survives the kernel swap:
+    poking the pallas decode step with a wider slot batch after a clean
+    run makes _assert_no_retrace raise."""
+    eng, _ = _engine_run("pallas")
+    assert _trace_count(eng.decode_fn) == 1
+    layout = PagedLayout(block_size=4, num_blocks=12,
+                         max_blocks_per_seq=4)
+    wide = 3                                  # engine compiled slots=2
+    tables = jnp.full((wide, 4), layout.null_block, jnp.int32)
+    tables = tables.at[:, 0].set(jnp.arange(wide))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
+        cache = eng.init_cache_fn()
+        eng.decode_fn(jnp.zeros((wide,), jnp.int32), cache, tables,
+                      jnp.zeros((wide,), jnp.int32))
+    with pytest.raises(RuntimeError, match="retraced"):
+        eng._assert_no_retrace()
+
+
+def test_serve_batch_spec_warns_once_per_build(caplog, monkeypatch):
+    """Regression: the replicated-batch fallback warning fires once at
+    step-BUILD time, not once per decode step — 3 decode steps after a
+    non-divisible build must add no further warnings."""
+    import logging
+
+    cfg, model, _ = _model("olmo-1b", compute_dtype="float32")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = steps_mod.init_params_sharded(model, mesh,
+                                           jax.random.PRNGKey(0))
+    layout = PagedLayout(block_size=4, num_blocks=12,
+                         max_blocks_per_seq=4)
+    # pretend the mesh has a DP extent of 2 so slots=3 is non-divisible
+    monkeypatch.setattr(steps_mod, "dp_size", lambda m: 2)
+    slots = 3
+    with caplog.at_level(logging.WARNING, logger="repro.launch.steps"):
+        with compat.set_mesh(mesh):
+            decode = steps_mod.build_paged_decode_step(model, mesh,
+                                                       layout, slots)
+            cache = jax.jit(functools.partial(model.init_paged_cache,
+                                              layout))()
+            tables = jnp.full((slots, 4), layout.null_block, jnp.int32)
+            tables = tables.at[:, 0].set(jnp.arange(slots))
+            kv_lens = jnp.zeros((slots,), jnp.int32)
+            toks = jnp.zeros((slots,), jnp.int32)
+            for _ in range(3):
+                _, cache = decode(params, toks, cache, tables, kv_lens)
+    warns = [r for r in caplog.records
+             if "FULLY-REPLICATED" in r.getMessage()]
+    assert len(warns) == 1, (
+        f"expected exactly one build-time fallback warning, got "
+        f"{len(warns)}")
